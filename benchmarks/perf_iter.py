@@ -1,0 +1,106 @@
+"""§Perf hillclimb driver: re-lower one (arch x shape) cell with config
+overrides and print the three roofline terms — one command per hypothesis.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch mamba2-370m \
+      --shape train_4k --set ssm_chunk=512 remat_policy=dots
+
+Overrides are ModelConfig fields (int/float/bool/str auto-coerced).
+`--gbdt` mode iterates the GBDT cell instead (overrides on GBDTConfig,
+plus --feature-shard / --no-sketch / --outputs).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+
+
+def coerce(val: str):
+    for cast in (int, float):
+        try:
+            return cast(val)
+        except ValueError:
+            pass
+    if val in ("True", "true"):
+        return True
+    if val in ("False", "false"):
+        return False
+    return val
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--set", nargs="*", default=[],
+                    metavar="FIELD=VALUE", dest="overrides")
+    ap.add_argument("--gbdt", action="store_true")
+    ap.add_argument("--feature-shard", action="store_true")
+    ap.add_argument("--no-sketch", action="store_true")
+    ap.add_argument("--outputs", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="also compile full depth for memory analysis")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as DR
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import shape_by_name
+    from repro.roofline import analysis as RA
+    from repro.configs import get_config
+
+    over = dict(kv.split("=", 1) for kv in args.overrides)
+    over = {k: coerce(v) for k, v in over.items()}
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.perf_counter()
+
+    if args.gbdt:
+        rec = DR.run_gbdt(multi_pod=args.multi_pod,
+                          sketch=not args.no_sketch,
+                          feature_shard=args.feature_shard,
+                          n_outputs=args.outputs or None)
+        out = {"cell": rec["shape"], "tag": args.tag, **rec.get("full", {}),
+               "status": rec["status"]}
+        out.pop("hlo_text", None)
+    else:
+        cfg = get_config(args.arch)
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        cell = shape_by_name(args.shape)
+        l1, l2 = DR.probe_depths(cfg)
+        probes = []
+        for L in (l1, l2):
+            lowered = DR.lower_cell(DR.reduced(cfg, L), cell, mesh)
+            probes.append(DR.compile_and_analyze(lowered, mesh.size))
+        ex = lambda key: RA.extrapolate(probes[0][key], probes[1][key],
+                                        l1, l2, cfg.n_layers)
+        tokens = cell.global_batch * (cell.seq_len
+                                      if cell.kind != "decode" else 1)
+        n = cfg.active_params() if cfg.n_experts else cfg.n_params()
+        mf = (RA.model_flops_train(n, tokens) if cell.kind == "train"
+              else RA.model_flops_decode(n, tokens)
+              if cell.kind == "decode"
+              else RA.model_flops_train(n, tokens) / 3.0)
+        terms = RA.RooflineTerms(flops=ex("flops"),
+                                 hbm_bytes=ex("hbm_bytes"),
+                                 collective_bytes=ex("collective_bytes"),
+                                 chips=mesh.size, model_flops=mf)
+        out = {"cell": f"{args.arch} x {args.shape}", "tag": args.tag,
+               "overrides": over, **terms.to_dict()}
+        if args.full:
+            lowered = DR.lower_cell(cfg, cell, mesh)
+            full = DR.compile_and_analyze(lowered, mesh.size)
+            out["full_memory"] = full["memory"]
+            out["full_collective_counts"] = full["collectives"]["count"]
+
+    out["wall_s"] = round(time.perf_counter() - t0, 1)
+    print(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Render results/bench_*.json into EXPERIMENTS.md §Repro markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def load(name):
+    p = os.path.join(RESULTS, f"bench_{name}.json")
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def table1():
+    rows = load("table1")
+    if not rows:
+        return ""
+    out = ["#### Quality (test loss; synthetic App. B.7 protocol)\n",
+           "| task | d | method | k | test_loss | rounds | time_s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        meth = (r["method"] if r["strategy"] == "single_tree"
+                else "one-vs-all (XGBoost strategy)")
+        if meth == "none":
+            meth = "Full (no sketch)"
+        out.append(f"| {r['task']} | {r['d']} | {meth} | {r['k'] or '-'} | "
+                   f"{r['test_loss']:.4f} | {r['rounds']} | {r['time_s']} |")
+    return "\n".join(out)
+
+
+def fig1():
+    rows = load("fig1")
+    if not rows:
+        return ""
+    out = ["#### Training time vs output dimension (paper Fig. 1/4 analogue)\n",
+           "| d | Full single-tree | RP k=5 | one-vs-all | speedup RP vs Full |",
+           "|---|---|---|---|---|"]
+    byd = {}
+    for r in rows:
+        byd.setdefault(r["d"], {})[
+            (r["strategy"], r["method"])] = r["time_s"]
+    for d, v in sorted(byd.items()):
+        full = v.get(("single_tree", "none"))
+        rp = v.get(("single_tree", "random_projection"))
+        ova = v.get(("one_vs_all", "none"), "-")
+        sp = f"{full/rp:.2f}x" if full and rp else "-"
+        out.append(f"| {d} | {full}s | {rp}s | {ova}{'s' if ova != '-' else ''} | {sp} |")
+    return "\n".join(out)
+
+
+def fig3():
+    rows = load("fig3")
+    if not rows:
+        return ""
+    out = ["#### Learning curves (paper Fig. 3 analogue: rounds to converge)\n",
+           "| method | k | rounds | final valid loss |", "|---|---|---|---|"]
+    for r in rows:
+        c = r["curve"]
+        out.append(f"| {r['method']} | {r['k'] or '-'} | {len(c)} | "
+                   f"{min(c):.4f} |")
+    return "\n".join(out)
+
+
+def rounds():
+    rows = load("rounds")
+    if not rows:
+        return ""
+    out = ["#### Rounds to convergence (paper Table 13 analogue)\n",
+           "| method | k | rounds | test loss |", "|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['method']} | {r['k'] or '-'} | {r['rounds']} | "
+                   f"{r['test_loss']:.4f} |")
+    return "\n".join(out)
+
+
+def compression():
+    rows = load("compression")
+    if not rows:
+        return ""
+    out = ["#### Sketched DP all-reduce (beyond-paper bridge)\n",
+           "| k | bytes ratio | recon rel err (theory sqrt(1-k/b)) |",
+           "|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['k']} | {r['bytes_ratio']} | {r['recon_rel_err']} |")
+    return "\n".join(out)
+
+
+def main():
+    for section in (table1, fig1, fig3, rounds, compression):
+        s = section()
+        if s:
+            print(s + "\n")
+
+
+if __name__ == "__main__":
+    main()

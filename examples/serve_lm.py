@@ -1,0 +1,34 @@
+"""Batched serving example: continuous-batching generation loop.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.training.serve_lib import BatchedServer, ServeConfig
+
+
+def main():
+    cfg = smoke_config("h2o-danube-3-4b")      # sliding-window decode path
+    params = lm.init(cfg, jax.random.key(0))
+    server = BatchedServer(cfg, ServeConfig(max_seq_len=128, temperature=0.8),
+                           params, batch_size=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=8).tolist()
+               for _ in range(10)]
+    t0 = time.perf_counter()
+    outs = server.generate(prompts, max_new_tokens=24)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"[serve] 10 requests -> {n_tok} tokens in {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s, batch=4 slots)")
+    for i, o in enumerate(outs[:3]):
+        print(f"  request {i}: {o}")
+
+
+if __name__ == "__main__":
+    main()

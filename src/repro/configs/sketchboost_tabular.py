@@ -1,0 +1,12 @@
+"""The paper's own workload: SketchBoost on a synthetic multiclass table
+(paper Appendix B.7 scale: 2M rows x 100 features; d classes configurable).
+Joins the dry-run/roofline matrix beyond the 40 assigned LM cells."""
+from repro.core.boosting import GBDTConfig
+
+CONFIG = GBDTConfig(
+    loss="multiclass", n_outputs=512, strategy="single_tree",
+    sketch_method="random_projection", sketch_k=5,
+    n_trees=100, depth=6, learning_rate=0.05, lambda_l2=1.0, n_bins=256,
+)
+N_ROWS = 2_097_152     # 2M, divisible by 512 devices
+N_FEATURES = 100

@@ -1,0 +1,12 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention block every 6
+layers [arXiv:2411.15242; hf].  38L d_model=2048 32H(kv=32) d_ff=8192
+vocab=32000 ssm_state=64."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_chunk=128,
+    attn_every=6, act="gelu", tie_embeddings=True,
+)

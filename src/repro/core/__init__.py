@@ -1,0 +1,11 @@
+"""SketchBoost core: sketched split scoring GBDT (the paper's contribution)."""
+from repro.core.boosting import GBDTConfig, SketchBoost, boost_step
+from repro.core.losses import LOSSES, get_loss
+from repro.core.sketch import SKETCH_METHODS, build_sketch, sketch_sharded
+from repro.core.tree import Forest, Tree, grow_tree, predict_forest
+
+__all__ = [
+    "GBDTConfig", "SketchBoost", "boost_step", "LOSSES", "get_loss",
+    "SKETCH_METHODS", "build_sketch", "sketch_sharded", "Forest", "Tree",
+    "grow_tree", "predict_forest",
+]

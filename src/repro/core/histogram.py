@@ -1,0 +1,67 @@
+"""Gradient histogram accumulation over (node, feature, bin) cells.
+
+This is the GBDT hot spot (Sec. 3.4: O(n * m * k) per tree level).  The public
+entry point ``build_histograms`` dispatches to the Pallas TPU kernel
+(`repro.kernels.hist_kernel`) when requested / available and to the pure-jnp
+segment-sum path otherwise.  Both produce identical ``(nodes, m, bins, c)`` tensors
+(c = sketch dim + 1 count channel, or 2d for the leaf-value pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def build_histograms_jnp(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
+                         *, n_nodes: int, n_bins: int) -> jax.Array:
+    """Pure-jnp histogram builder (also the Pallas oracle).
+
+    Args:
+      codes:    (n, m) uint8/int feature bin codes.
+      node_pos: (n,) int32 position of each sample within the current tree level.
+      stats:    (n, c) float32 per-sample statistics (sketched gradients + count
+                channel, or [G | H] for the leaf pass).
+    Returns:
+      (n_nodes, m, n_bins, c) float32 histograms.
+    """
+    n, m = codes.shape
+    c = stats.shape[1]
+    seg_base = node_pos.astype(jnp.int32) * n_bins
+
+    def per_feature(col: jax.Array) -> jax.Array:          # col: (n,)
+        seg = seg_base + col.astype(jnp.int32)
+        return jax.ops.segment_sum(stats, seg, num_segments=n_nodes * n_bins,
+                                   indices_are_sorted=False)
+
+    hist = jax.vmap(per_feature, in_axes=1)(codes)          # (m, nodes*B, c)
+    return hist.reshape(m, n_nodes, n_bins, c).transpose(1, 0, 2, 3)
+
+
+def build_histograms(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
+                     *, n_nodes: int, n_bins: int, use_kernel: bool = False,
+                     interpret: bool = True) -> jax.Array:
+    """Dispatching builder.  ``use_kernel=True`` routes to the Pallas TPU kernel
+    (interpret mode on CPU); default is the jnp path, which XLA fuses well on CPU
+    and which serves as the reference implementation everywhere."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.histogram(codes, node_pos, stats, n_nodes=n_nodes,
+                              n_bins=n_bins, interpret=interpret)
+    return build_histograms_jnp(codes, node_pos, stats, n_nodes=n_nodes,
+                                n_bins=n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def leaf_sums(leaf_pos: jax.Array, G: jax.Array, H: jax.Array,
+              *, n_leaves: int):
+    """Per-leaf full-gradient sums for the leaf-value pass (eq. (3)).
+
+    Unlike the split search this uses the *full* (n, d) gradients/Hessians.
+    Returns (G_sum, H_sum), each (n_leaves, d).
+    """
+    gs = jax.ops.segment_sum(G, leaf_pos.astype(jnp.int32), num_segments=n_leaves)
+    hs = jax.ops.segment_sum(H, leaf_pos.astype(jnp.int32), num_segments=n_leaves)
+    return gs, hs

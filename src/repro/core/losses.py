@@ -1,0 +1,85 @@
+"""Multioutput losses: value, gradient and (diagonal) Hessian, eq. (2) of the paper.
+
+Every loss returns per-sample, per-output first/second derivatives with respect to
+the raw ensemble output ``F`` (n, d).  Hessians are diagonal by construction
+(separable losses) or purposely diagonalized, as in CatBoost/GBDT-MO — see Sec. 2.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Loss(NamedTuple):
+    name: str
+    # (F, Y) -> scalar mean loss
+    value: Callable[[jax.Array, jax.Array], jax.Array]
+    # (F, Y) -> (G, H), each (n, d)
+    grad_hess: Callable[[jax.Array, jax.Array], Tuple[jax.Array, jax.Array]]
+    # raw scores -> predictions (proba / values)
+    transform: Callable[[jax.Array], jax.Array]
+
+
+def _softmax_ce_value(F: jax.Array, Y: jax.Array) -> jax.Array:
+    """Y is integer class ids (n,) or one-hot (n, d)."""
+    logp = jax.nn.log_softmax(F.astype(jnp.float32), axis=-1)
+    if Y.ndim == 1:
+        picked = jnp.take_along_axis(logp, Y[:, None].astype(jnp.int32), axis=-1)
+        return -jnp.mean(picked)
+    return -jnp.mean(jnp.sum(Y * logp, axis=-1))
+
+
+def _softmax_ce_gh(F: jax.Array, Y: jax.Array):
+    P = jax.nn.softmax(F.astype(jnp.float32), axis=-1)
+    if Y.ndim == 1:
+        Y = jax.nn.one_hot(Y, F.shape[-1], dtype=jnp.float32)
+    G = P - Y
+    H = P * (1.0 - P)                    # diagonal of the softmax Hessian
+    return G, H
+
+
+def _bce_value(F: jax.Array, Y: jax.Array) -> jax.Array:
+    F = F.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(F, 0) - F * Y + jnp.log1p(jnp.exp(-jnp.abs(F))))
+
+
+def _bce_gh(F: jax.Array, Y: jax.Array):
+    P = jax.nn.sigmoid(F.astype(jnp.float32))
+    return P - Y, P * (1.0 - P)
+
+
+def _mse_value(F: jax.Array, Y: jax.Array) -> jax.Array:
+    return 0.5 * jnp.mean(jnp.square(F.astype(jnp.float32) - Y))
+
+
+def _mse_gh(F: jax.Array, Y: jax.Array):
+    G = F.astype(jnp.float32) - Y
+    return G, jnp.ones_like(G)
+
+
+MULTICLASS = Loss("multiclass", _softmax_ce_value, _softmax_ce_gh,
+                  lambda F: jax.nn.softmax(F, axis=-1))
+MULTILABEL = Loss("multilabel", _bce_value, _bce_gh, jax.nn.sigmoid)
+MULTITASK_MSE = Loss("multitask_mse", _mse_value, _mse_gh, lambda F: F)
+
+LOSSES = {l.name: l for l in (MULTICLASS, MULTILABEL, MULTITASK_MSE)}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:
+        raise ValueError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
+
+
+def rmse(F: jax.Array, Y: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean(jnp.square(F - Y)))
+
+
+def accuracy(F: jax.Array, Y: jax.Array) -> jax.Array:
+    pred = jnp.argmax(F, axis=-1)
+    if Y.ndim > 1:
+        Y = jnp.argmax(Y, axis=-1)
+    return jnp.mean((pred == Y).astype(jnp.float32))

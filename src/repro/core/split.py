@@ -1,0 +1,102 @@
+"""Split scoring and best-split search (eq. (4) of the paper).
+
+Given per-(node, feature, bin) histograms of the sketched gradients and sample
+counts, computes the impurity score ``S(R_l) + S(R_r)`` for every candidate
+threshold and returns the arg-max split per node.  Second-order information is
+ignored in the split search (denominator = count + lambda), matching the paper's
+baseline design (Sec. 3: CatBoost-style "best practice" (a)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class Splits(NamedTuple):
+    feat: jax.Array    # (nodes,) int32 feature index
+    thr: jax.Array     # (nodes,) int32 threshold bin (go left if code <= thr)
+    gain: jax.Array    # (nodes,) float32 information gain (0.5*(S_l+S_r-S_p))
+    is_leaf: jax.Array # (nodes,) bool — no positive-gain split found
+
+
+@functools.partial(jax.jit, static_argnames=())
+def split_scores(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
+                 feature_mask: jax.Array | None = None) -> jax.Array:
+    """Candidate scores.
+
+    Args:
+      hist: (nodes, m, B, k+1) — channels [0:k] sketched gradient sums, [-1] counts.
+    Returns:
+      gain: (nodes, m, B) float32; -inf where the split is illegal (last bin,
+            min_data violated, masked feature).
+    """
+    csum = jnp.cumsum(hist, axis=2)                       # left stats for thr=b
+    total = csum[:, :, -1:, :]                            # (nodes, m, 1, k+1)
+    gl, cl = csum[..., :-1], csum[..., -1]
+    gr = total[..., :-1] - gl
+    cr = total[..., -1] - cl
+    s_left = jnp.sum(jnp.square(gl), axis=-1) / (cl + lam)
+    s_right = jnp.sum(jnp.square(gr), axis=-1) / (cr + lam)
+    s_parent = (jnp.sum(jnp.square(total[..., :-1]), axis=-1)
+                / (total[..., -1] + lam))                 # (nodes, m, 1)
+    gain = 0.5 * (s_left + s_right - s_parent)
+    B = hist.shape[2]
+    legal = (jnp.arange(B) < B - 1)[None, None, :]        # last bin = no split
+    legal = legal & (cl >= min_data) & (cr >= min_data)
+    if feature_mask is not None:
+        legal = legal & feature_mask[None, :, None]
+    return jnp.where(legal, gain, NEG_INF)
+
+
+@jax.jit
+def best_splits(gain: jax.Array, min_gain: jax.Array = jnp.float32(0.0)) -> Splits:
+    """Arg-max split per node from the (nodes, m, B) gain tensor.
+
+    Nodes with no positive-gain candidate become pass-through leaves: feat=0,
+    thr=B-1 routes every sample left, so the (empty) right child never receives
+    data and its zero leaf value is unused.
+    """
+    nodes, m, B = gain.shape
+    flat = gain.reshape(nodes, m * B)
+    best = jnp.argmax(flat, axis=1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    feat = (best // B).astype(jnp.int32)
+    thr = (best % B).astype(jnp.int32)
+    is_leaf = ~(best_gain > min_gain)
+    feat = jnp.where(is_leaf, 0, feat)
+    thr = jnp.where(is_leaf, B - 1, thr)
+    gain_out = jnp.where(is_leaf, 0.0, best_gain)
+    return Splits(feat=feat, thr=thr, gain=gain_out, is_leaf=is_leaf)
+
+
+def brute_force_best_split(codes, stats, lam: float, min_data: int = 0):
+    """O(n * m * B * d) oracle for tests: enumerates every (feature, threshold)
+    for a single node and scores it directly from raw statistics.  Returns
+    (feat, thr, gain) computed without histograms (numpy semantics, jnp arrays)."""
+    n, m = codes.shape
+    g, counts = stats[:, :-1], stats[:, -1]
+    B = 256
+    best = (-jnp.inf, 0, 0)
+    s_parent = float(jnp.sum(jnp.square(jnp.sum(g, axis=0)))
+                     / (jnp.sum(counts) + lam))
+    best_feat, best_thr, best_gain = 0, B - 1, -jnp.inf
+    for f in range(m):
+        col = codes[:, f]
+        for thr in range(int(col.max()) + 1):
+            left = (col <= thr)
+            cl = float(jnp.sum(counts * left))
+            cr = float(jnp.sum(counts) - cl)
+            if cl < min_data or cr < min_data or cr == 0:
+                continue
+            gl = jnp.sum(g * left[:, None].astype(g.dtype), axis=0)
+            gr = jnp.sum(g, axis=0) - gl
+            s = float(jnp.sum(gl**2) / (cl + lam) + jnp.sum(gr**2) / (cr + lam))
+            gain = 0.5 * (s - s_parent)
+            if gain > best_gain:
+                best_feat, best_thr, best_gain = f, thr, gain
+    return best_feat, best_thr, best_gain

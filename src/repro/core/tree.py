@@ -1,0 +1,151 @@
+"""Oblivious-free multivariate decision trees: depth-wise growth + heap layout.
+
+A tree of depth D is a perfect binary heap: internal nodes ``0 .. 2^D-2`` (level
+``l`` occupies ``[2^l - 1, 2^(l+1) - 1)``), leaves ``0 .. 2^D - 1``.  Samples that
+reach a no-split node are routed left, so pass-through nodes behave as leaves.
+
+Growth follows the paper exactly:
+  1. split search uses the *sketched* statistics (``stats`` = [G_k | 1]),
+  2. leaf values use the *full* gradients/Hessians (eq. (3)):
+     ``v_j = - sum_i g_i / (sum_i h_i + lambda)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as H
+from repro.core import split as S
+
+
+class Tree(NamedTuple):
+    feat: jax.Array    # (2^D - 1,) int32
+    thr: jax.Array     # (2^D - 1,) int32 — go left if code <= thr
+    value: jax.Array   # (2^D, d) float32 leaf values
+    gain: jax.Array    # (2^D - 1,) float32 diagnostics
+
+    @property
+    def depth(self) -> int:
+        return (self.feat.shape[0] + 1).bit_length() - 1
+
+
+def route_level(codes: jax.Array, node_pos: jax.Array, feat: jax.Array,
+                thr: jax.Array) -> jax.Array:
+    """Advance every sample one level: ``pos <- 2*pos + [code > thr]``."""
+    n = codes.shape[0]
+    f = feat[node_pos]                                    # (n,)
+    code = codes[jnp.arange(n), f].astype(jnp.int32)
+    go_right = (code > thr[node_pos]).astype(jnp.int32)
+    return node_pos * 2 + go_right
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_bins", "use_kernel"))
+def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Array,
+              *, depth: int, n_bins: int, lam: float,
+              min_data_in_leaf: float = 1.0, min_gain: float = 0.0,
+              feature_mask: Optional[jax.Array] = None,
+              use_kernel: bool = False):
+    """Grow one multivariate tree (single-device path).
+
+    Args:
+      codes:   (n, m) uint8 binned features.
+      stats:   (n, k+1) sketched gradient stats + count channel (count channel may
+               carry SGB/GOSS sample weights).
+      G, H_diag: (n, d) full gradients / diagonal Hessians for the leaf pass.
+    Returns:
+      (Tree, leaf_pos) where leaf_pos is the (n,) leaf index of each sample.
+    """
+    n, m = codes.shape
+    lam = jnp.float32(lam)
+    min_data = jnp.float32(min_data_in_leaf)
+    min_gain_ = jnp.float32(min_gain)
+
+    heap_feat = jnp.zeros((2 ** depth - 1,), jnp.int32)
+    heap_thr = jnp.full((2 ** depth - 1,), n_bins - 1, jnp.int32)
+    heap_gain = jnp.zeros((2 ** depth - 1,), jnp.float32)
+
+    node_pos = jnp.zeros((n,), jnp.int32)
+    for lvl in range(depth):
+        n_nodes = 2 ** lvl
+        hist = H.build_histograms(codes, node_pos, stats, n_nodes=n_nodes,
+                                  n_bins=n_bins, use_kernel=use_kernel)
+        gain = S.split_scores(hist, lam, min_data, feature_mask)
+        sp = S.best_splits(gain, min_gain_)
+        off = n_nodes - 1
+        heap_feat = jax.lax.dynamic_update_slice(heap_feat, sp.feat, (off,))
+        heap_thr = jax.lax.dynamic_update_slice(heap_thr, sp.thr, (off,))
+        heap_gain = jax.lax.dynamic_update_slice(heap_gain, sp.gain, (off,))
+        node_pos = route_level(codes, node_pos, sp.feat, sp.thr)
+
+    sample_w = stats[:, -1:]                              # SGB/GOSS weights
+    g_sum, h_sum = H.leaf_sums(node_pos, G * sample_w, H_diag * sample_w,
+                               n_leaves=2 ** depth)
+    value = -g_sum / (h_sum + lam)
+    tree = Tree(feat=heap_feat, thr=heap_thr, value=value, gain=heap_gain)
+    return tree, node_pos
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def tree_leaf_index(feat: jax.Array, thr: jax.Array, codes: jax.Array,
+                    *, depth: int) -> jax.Array:
+    """Vectorized heap walk: (n, m) codes -> (n,) leaf index."""
+    n = codes.shape[0]
+    pos = jnp.zeros((n,), jnp.int32)
+    for lvl in range(depth):
+        heap = pos + (2 ** lvl - 1)
+        f = feat[heap]
+        code = codes[jnp.arange(n), f].astype(jnp.int32)
+        pos = pos * 2 + (code > thr[heap]).astype(jnp.int32)
+    return pos
+
+
+def predict_tree(tree: Tree, codes: jax.Array) -> jax.Array:
+    """(n, m) codes -> (n, d) tree response."""
+    pos = tree_leaf_index(tree.feat, tree.thr, codes, depth=tree.depth)
+    return tree.value[pos]
+
+
+class Forest(NamedTuple):
+    """Stacked ensemble of T trees (all arrays carry a leading T axis)."""
+    feat: jax.Array     # (T, 2^D - 1)
+    thr: jax.Array      # (T, 2^D - 1)
+    value: jax.Array    # (T, 2^D, d)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return (self.feat.shape[1] + 1).bit_length() - 1
+
+
+def stack_trees(trees) -> Forest:
+    return Forest(feat=jnp.stack([t.feat for t in trees]),
+                  thr=jnp.stack([t.thr for t in trees]),
+                  value=jnp.stack([t.value for t in trees]))
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_apply(feat, thr, value, codes, lr, base, *, depth: int):
+    def body(acc, tree_arrays):
+        f, t, v = tree_arrays
+        pos = tree_leaf_index(f, t, codes, depth=depth)
+        return acc + lr * v[pos], None
+
+    n = codes.shape[0]
+    init = jnp.broadcast_to(base, (n, value.shape[-1])).astype(jnp.float32)
+    out, _ = jax.lax.scan(body, init, (feat, thr, value))
+    return out
+
+
+def predict_forest(forest: Forest, codes: jax.Array, lr: float,
+                   base_score: jax.Array) -> jax.Array:
+    """Raw ensemble scores F(x) = base + lr * sum_t f_t(x)."""
+    return _forest_apply(forest.feat, forest.thr, forest.value, codes,
+                         jnp.float32(lr), base_score, depth=forest.depth)

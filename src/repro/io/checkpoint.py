@@ -1,0 +1,160 @@
+"""Checkpointing: atomic, async, restart-friendly (fault-tolerance substrate).
+
+Format: one ``.npz`` of flattened leaves + a JSON manifest (step, tree paths,
+dtypes, user metadata).  Writes go to a temp dir then ``os.replace`` (atomic on
+POSIX) so a crash mid-write never corrupts the latest checkpoint.  ``save`` can
+run on a background thread (training continues) — ``wait()`` joins before the
+next save or at exit.  Works for both transformer state (params/opt/step) and
+GBDT ensembles (Forest arrays + quantizer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    """Directory layout::
+
+        <root>/step_<n>/state.npz
+        <root>/step_<n>/manifest.json
+        <root>/LATEST            (atomic pointer file)
+    """
+
+    def __init__(self, root: str, keep_n: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Tree, metadata: Optional[Dict] = None):
+        self.wait()
+        # Snapshot to host before handing to the writer thread.  Dtypes numpy
+        # cannot round-trip (bfloat16 & friends) are stored as byte views with
+        # the true dtype recorded in the manifest.
+        items, dtypes = [], {}
+        for k, v in _flatten_with_paths(tree):
+            arr = np.asarray(v)
+            if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+                dtypes[k] = arr.dtype.name
+                arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else
+                               np.uint16 if arr.dtype.itemsize == 2 else
+                               np.uint32)
+            items.append((k, arr))
+        metadata = dict(metadata or {})
+        metadata["_dtypes"] = dtypes
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, items, metadata or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, items, metadata or {})
+
+    def _write(self, step: int, items, metadata: Dict):
+        tmp = os.path.join(self.root, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(self.root, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"),
+                 **{k: v for k, v in items})
+        manifest = {"step": step, "time": time.time(),
+                    "keys": [k for k, _ in items],
+                    "metadata": metadata}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)                     # atomic publish
+        ptr_tmp = os.path.join(self.root, ".LATEST_tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(str(step))
+        os.replace(ptr_tmp, os.path.join(self.root, "LATEST"))
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.root, "LATEST")
+        if os.path.exists(ptr):
+            with open(ptr) as f:
+                s = int(f.read().strip())
+            if os.path.exists(os.path.join(self.root, f"step_{s}")):
+                return s
+        steps = self.all_steps()                  # fall back to a dir scan
+        return steps[-1] if steps else None
+
+    def restore(self, like: Tree, step: Optional[int] = None,
+                shardings: Optional[Tree] = None) -> Tuple[Tree, int]:
+        """Restore into the structure of ``like`` (values replaced).  With
+        ``shardings``, leaves are device_put to the target mesh layout —
+        the restart path after an elastic re-mesh."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        data = np.load(os.path.join(self.root, f"step_{step}", "state.npz"))
+        dtypes = self.manifest(step).get("metadata", {}).get("_dtypes", {})
+        paths = [k for k, _ in _flatten_with_paths(like)]
+        import ml_dtypes
+        leaves = []
+        for k in paths:
+            arr = data[k]
+            if k in dtypes:
+                arr = arr.view(np.dtype(dtypes[k]))
+            leaves.append(arr)
+        treedef = jax.tree.structure(like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jax.numpy.asarray(x), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, step
+
+    def manifest(self, step: int) -> Dict:
+        with open(os.path.join(self.root, f"step_{step}",
+                               "manifest.json")) as f:
+            return json.load(f)

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, layout, dispatch).
+
+Each op pads inputs to kernel tile multiples, calls the kernel (interpret mode
+on CPU — the TARGET is TPU, where ``interpret=False`` runs the compiled Mosaic
+kernel), and unpads.  ``*_ref`` semantics are defined in `repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hist_kernel import histogram_pallas
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "row_tile",
+                                             "nb_chunk", "lane_pad",
+                                             "interpret"))
+def histogram(codes: jax.Array, node_pos: jax.Array, stats: jax.Array, *,
+              n_nodes: int, n_bins: int, row_tile: int = 256,
+              nb_chunk: int = 2048, lane_pad: int = 8,
+              interpret: bool = True) -> jax.Array:
+    """(n, m) codes + (n,) nodes + (n, c) stats -> (n_nodes, m, n_bins, c).
+
+    Padded rows carry zero stats (and node 0 / bin 0), contributing nothing.
+    The channel axis is padded to ``lane_pad`` for MXU lane alignment (the TPU
+    deployment would use 128; tests keep 8 to stay cheap in interpret mode).
+    """
+    n, m = codes.shape
+    c = stats.shape[1]
+    codes_t = _pad_to(codes.T.astype(jnp.int32), row_tile, axis=1)
+    node_p = _pad_to(node_pos.astype(jnp.int32), row_tile, axis=0)
+    stats_p = _pad_to(_pad_to(stats.astype(jnp.float32), lane_pad, axis=1),
+                      row_tile, axis=0)
+    nb_chunk = min(nb_chunk, n_nodes * n_bins)
+    while (n_nodes * n_bins) % nb_chunk:
+        nb_chunk //= 2
+    hist = histogram_pallas(codes_t, node_p, stats_p, n_nodes=n_nodes,
+                            n_bins=n_bins, row_tile=row_tile,
+                            nb_chunk=nb_chunk, interpret=interpret)
+    hist = hist[:, :, :c]                                  # strip lane padding
+    return hist.reshape(m, n_nodes, n_bins, c).transpose(1, 0, 2, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """GQA flash attention; pads sq/sk to tile multiples and unpads."""
+    b, hq, sq, dh = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (sk - 1).bit_length()))
+    qp = _pad_to(q, block_q, axis=2)
+    kp = _pad_to(k, block_k, axis=2)
+    vp = _pad_to(v, block_k, axis=2)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out[:, :, :sq]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, window: int | None = None,
+                     block_s: int = 512, interpret: bool = True) -> jax.Array:
+    """Single-token GQA decode attention; pads the cache axis."""
+    s = k.shape[2]
+    block_s = min(block_s, max(8, 1 << (s - 1).bit_length()))
+    kp = _pad_to(k, block_s, axis=2)
+    vp = _pad_to(v, block_s, axis=2)
+    return decode_attention_pallas(q, kp, vp, lengths, window=window,
+                                   block_s=block_s, interpret=interpret)
+
+
+# Re-export the oracles for convenience.
+histogram_ref = ref.histogram_ref
+mha_ref = ref.mha_ref
+decode_attention_ref = ref.decode_attention_ref

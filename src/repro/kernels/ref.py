@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` layer).
+
+These are the semantics contracts: tests sweep shapes/dtypes and
+``assert_allclose`` each kernel against the function here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def histogram_ref(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
+                  *, n_nodes: int, n_bins: int) -> jax.Array:
+    """(n, m) codes, (n,) nodes, (n, c) stats -> (n_nodes, m, n_bins, c)."""
+    seg_base = node_pos.astype(jnp.int32) * n_bins
+
+    def per_feature(col):
+        seg = seg_base + col.astype(jnp.int32)
+        return jax.ops.segment_sum(stats, seg, num_segments=n_nodes * n_bins)
+
+    hist = jax.vmap(per_feature, in_axes=1)(codes)        # (m, nodes*B, c)
+    m = codes.shape[1]
+    return hist.reshape(m, n_nodes, n_bins, -1).transpose(1, 0, 2, 3)
+
+
+def _attn_mask(sq: int, sk: int, *, causal: bool, window: int | None,
+               q_offset: int) -> jax.Array:
+    """(sq, sk) boolean attention mask. q position i attends kv position j iff
+    j <= i+q_offset (causal) and i+q_offset - j < window (sliding window)."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    return mask
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            window: int | None = None, q_offset: int = 0) -> jax.Array:
+    """GQA reference attention.
+
+    q: (b, hq, sq, dh); k, v: (b, hkv, sk, dh) with hq % hkv == 0.
+    Returns (b, hq, sq, dh) in q.dtype; softmax in float32.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    mask = _attn_mask(sq, k.shape[2], causal=causal, window=window,
+                      q_offset=q_offset)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *, window: int | None = None
+                         ) -> jax.Array:
+    """Single-token GQA decode attention against a (possibly padded) KV cache.
+
+    q: (b, hq, dh); k, v: (b, hkv, s, dh); lengths: (b,) valid cache lengths.
+    Position of the new token is lengths[b] - 1 after appending.
+    """
+    b, hq, dh = q.shape
+    s = k.shape[2]
+    kpos = jnp.arange(s)[None, :]                          # (1, s)
+    valid = kpos < lengths[:, None]
+    if window is not None:
+        valid &= (lengths[:, None] - 1 - kpos) < window
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, dh).astype(q.dtype)

@@ -1,0 +1,349 @@
+"""Multi-pod dry-run: AOT lower + compile every (architecture x shape x mesh)
+cell and extract memory / cost / collective analysis for the roofline.
+
+MUST set XLA_FLAGS before any jax import (jax locks the device count on first
+init) — hence the first two lines.  Smoke tests and benches must NOT import
+this module; they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --gbdt            # paper's cell
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, get_gbdt_config, smoke_config
+from repro.core import distributed as GD
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeCell, shape_by_name
+from repro.roofline import analysis as RA
+from repro.training import optimizer as opt
+from repro.training import serve_lib, train_lib
+
+SKIP_LONG = "skip: long_500k needs sub-quadratic attention (DESIGN.md §4)"
+
+
+def cell_is_legal(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.is_subquadratic:
+        return False, SKIP_LONG
+    return True, ""
+
+
+def _batch_axes(mesh, cfg: Optional[ModelConfig] = None) -> Tuple[str, ...]:
+    axes = (("pod", "data", "model")
+            if cfg is not None and cfg.tp_strategy == "dp_only"
+            else ("pod", "data"))
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_train_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
+                     tcfg: Optional[train_lib.TrainConfig] = None):
+    """AOT-lower a full train (or prefill) step for one cell."""
+    if tcfg is None:
+        tcfg = train_lib.TrainConfig(opt=train_lib.default_opt_config(cfg))
+    params_abs = lm.abstract(cfg, mesh)
+    specs = train_lib.input_specs(cfg, seq_len=cell.seq_len,
+                                  global_batch=cell.global_batch,
+                                  kind=cell.kind, mesh=mesh)
+    if cell.kind == "train":
+        step = train_lib.make_train_step(cfg, tcfg, mesh)
+        decls = lm.param_decls(cfg)
+        opt_abs = opt.opt_abstract(decls, tcfg.opt, mesh,
+                                   rules=lm.sharding_rules(cfg, mesh))
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            return jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, specs, step_abs)
+    # prefill: forward to last-token logits
+    pre = serve_lib.make_prefill_step(cfg, mesh)
+    with mesh:
+        return jax.jit(pre).lower(params_abs, specs)
+
+
+def lower_decode_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """AOT-lower one serve_step (1 new token, cache of cell.seq_len)."""
+    scfg = serve_lib.ServeConfig(max_seq_len=cell.seq_len, temperature=0.0)
+    step = serve_lib.make_serve_step(cfg, scfg, mesh)
+    baxes = _batch_axes(mesh, cfg)
+    params_abs = lm.abstract(cfg, mesh)
+    cache_abs = lm.abstract_cache(cfg, cell.global_batch, cell.seq_len, mesh,
+                                  batch_axes=baxes)
+    specs = train_lib.input_specs(cfg, seq_len=cell.seq_len,
+                                  global_batch=cell.global_batch,
+                                  kind="decode", mesh=mesh)
+    key = jax.random.key(0)
+    with mesh:
+        return jax.jit(step, donate_argnums=(1,)).lower(
+            params_abs, cache_abs, specs["token"], key)
+
+
+def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
+    if cell.kind == "decode":
+        return lower_decode_cell(cfg, cell, mesh)
+    return lower_train_cell(cfg, cell, mesh)
+
+
+# ---------------------------------------------------------------------------
+# GBDT (the paper's own workload) as an extra dry-run row
+# ---------------------------------------------------------------------------
+
+def lower_gbdt_cell(mesh, *, sketch: bool = True, feature_shard: bool = False,
+                    n_outputs: Optional[int] = None):
+    cfg, n_rows, n_features = get_gbdt_config()
+    if not sketch:
+        cfg = dataclasses.replace(cfg, sketch_method="none")
+    if n_outputs:
+        cfg = dataclasses.replace(cfg, n_outputs=n_outputs)
+    baxes = _batch_axes(mesh)
+    step = GD.make_distributed_boost_step(mesh, cfg, row_axes=baxes,
+                                          feature_shard=feature_shard)
+    specs = GD.gbdt_input_specs(n_rows, n_features, cfg.n_outputs, mesh, cfg,
+                                row_axes=baxes)
+    key = jax.random.key(0)
+    with mesh:
+        return step.lower(specs["F"], specs["codes"], specs["Y"], key)
+
+
+# ---------------------------------------------------------------------------
+# Analysis of a lowered/compiled cell
+# ---------------------------------------------------------------------------
+
+def compile_and_analyze(lowered, chips: int, model_flops: float = 0.0,
+                        keep_text: bool = False) -> Dict[str, Any]:
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    text = compiled.as_text()
+    coll = RA.parse_collectives(text)
+    # cost_analysis reports the PER-DEVICE SPMD program (verified in-container:
+    # per-layer flops slope x chips matches the analytic count); scale to
+    # global so the roofline terms divide by (chips * peak) per the assignment.
+    terms = RA.RooflineTerms(
+        flops=RA.cost_flops(cost) * chips,
+        hbm_bytes=RA.cost_bytes(cost) * chips,
+        collective_bytes=float(coll.total_bytes) * chips, chips=chips,
+        model_flops=model_flops)
+    out = {
+        "compile_s": round(compile_s, 2),
+        "memory": mem_d,
+        "collectives": {"bytes": coll.bytes_by_op, "count": coll.count_by_op},
+        **terms.to_dict(),
+    }
+    if keep_text:
+        out["hlo_text"] = text
+    return out
+
+
+def probe_depths(cfg: ModelConfig) -> Tuple[int, int]:
+    """Two reduced unrolled depths (multiples of any periodic-block period)."""
+    period = (cfg.attn_every if cfg.family == "hybrid"
+              else cfg.cross_attn_every if cfg.family == "vlm" else 1)
+    return period, 2 * period
+
+
+def reduced(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    """Unrolled reduced-depth probe config.  `remat` stays as configured so
+    recompute waste is visible in MODEL_FLOPS / HLO_FLOPs (§Roofline).
+    `microbatches=1`: the full step scans over microbatches (cost_analysis
+    would count the body once); one full-batch pass has the same total
+    FLOPs/bytes as mb accumulated passes, so the probe stays honest."""
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False,
+                               microbatches=1)
+
+
+def useful_model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) **plus** the causal
+    attention quadratic term the 6ND rule omits (PaLM-style MFU accounting) —
+    without it, long-sequence attention-heavy cells (grok-1: 48 heads x 4096²)
+    look like waste when they are useful work (verified by per-component flop
+    attribution, EXPERIMENTS.md §Perf Cell D)."""
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n = cfg.active_params() if cfg.n_experts else cfg.n_params()
+    if cell.kind == "train":
+        base = RA.model_flops_train(n, tokens)
+    elif cell.kind == "decode":
+        base = RA.model_flops_decode(n, tokens)
+    else:
+        base = RA.model_flops_train(n, tokens) / 3.0
+    # attention quadratic term
+    h, dh = cfg.n_heads, cfg.head_dim_
+    if cfg.family == "ssm":
+        n_attn_layers = 0
+    elif cfg.family == "hybrid":
+        n_attn_layers = lm.n_sites(cfg)
+    else:
+        n_attn_layers = cfg.n_layers
+    if n_attn_layers:
+        s = cell.seq_len
+        kv_span = min(s, cfg.window) if cfg.window is not None else s
+        if cell.kind == "decode":
+            per_layer = 4.0 * cell.global_batch * h * kv_span * dh
+        else:
+            fwd = 2.0 * cell.global_batch * s * kv_span * h * dh  # causal 1/2
+            per_layer = fwd * (3.0 if cell.kind == "train" else 1.0)
+        base += per_layer * n_attn_layers
+    return base
+
+
+def roofline_cell(arch: str, cell: ShapeCell, mesh, chips: int
+                  ) -> Dict[str, Any]:
+    """Two-point depth extrapolation of FLOPs / bytes / collective bytes
+    (scan bodies are counted once by cost_analysis; DESIGN.md §6)."""
+    cfg = get_config(arch)
+    l1, l2 = probe_depths(cfg)
+    probes = []
+    for L in (l1, l2):
+        lowered = lower_cell(reduced(cfg, L), cell, mesh)
+        probes.append(compile_and_analyze(lowered, chips))
+    full_L = cfg.n_layers
+    ex = lambda k: RA.extrapolate(probes[0][k], probes[1][k], l1, l2, full_L)
+    mf = useful_model_flops(cfg, cell)
+    terms = RA.RooflineTerms(
+        flops=ex("flops"), hbm_bytes=ex("hbm_bytes"),
+        collective_bytes=ex("collective_bytes"), chips=chips, model_flops=mf)
+    return {"probe_l1": {k: probes[0][k] for k in
+                         ("flops", "hbm_bytes", "collective_bytes",
+                          "compile_s")},
+            "probe_l2": {k: probes[1][k] for k in
+                         ("flops", "hbm_bytes", "collective_bytes",
+                          "compile_s")},
+            "probe_depths": [l1, l2],
+            **terms.to_dict()}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             do_full: bool = True, do_roofline: bool = True,
+             smoke: bool = False) -> Dict[str, Any]:
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    cell = shape_by_name(shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    legal, why = cell_is_legal(cfg, cell)
+    if not legal:
+        rec["status"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    try:
+        if do_full:
+            t0 = time.perf_counter()
+            lowered = lower_cell(cfg, cell, mesh)
+            rec["lower_s"] = round(time.perf_counter() - t0, 2)
+            rec["full"] = compile_and_analyze(lowered, chips)
+        if do_roofline and not multi_pod:
+            rec["roofline"] = roofline_cell(arch, cell, mesh, chips)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def run_gbdt(*, multi_pod: bool = False, sketch: bool = True,
+             feature_shard: bool = False, n_outputs: Optional[int] = None
+             ) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict[str, Any] = {
+        "arch": "sketchboost-gbdt", "mesh": "2x16x16" if multi_pod else "16x16",
+        "shape": f"2Mx100 d={n_outputs or get_gbdt_config()[0].n_outputs} "
+                 f"sketch={'on' if sketch else 'off'}"
+                 f"{' fshard' if feature_shard else ''}"}
+    try:
+        t0 = time.perf_counter()
+        lowered = lower_gbdt_cell(mesh, sketch=sketch,
+                                  feature_shard=feature_shard,
+                                  n_outputs=n_outputs)
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        rec["full"] = compile_and_analyze(lowered, mesh.size)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=[s.name for s in LM_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--gbdt", action="store_true")
+    ap.add_argument("--no-full", action="store_true",
+                    help="skip the full-depth compile (roofline probes only)")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = []
+    if args.gbdt:
+        results.append(run_gbdt(multi_pod=args.multi_pod))
+    elif args.all:
+        for arch in ARCH_NAMES:
+            for cell in LM_SHAPES:
+                print(f"=== {arch} x {cell.name} "
+                      f"({'multi' if args.multi_pod else 'single'}-pod)",
+                      flush=True)
+                rec = run_cell(arch, cell.name, multi_pod=args.multi_pod,
+                               do_full=not args.no_full,
+                               do_roofline=not args.no_roofline)
+                print(json.dumps({k: v for k, v in rec.items()
+                                  if k not in ("traceback",)},
+                                 default=str)[:600], flush=True)
+                results.append(rec)
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape (or --all / --gbdt) required")
+        rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       do_full=not args.no_full,
+                       do_roofline=not args.no_roofline)
+        results.append(rec)
+        print(json.dumps(rec, indent=2, default=str))
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    n_fail = sum(1 for r in results
+                 if str(r.get("status", "")).startswith("FAIL"))
+    print(f"[dryrun] {len(results)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.  Functions, not module constants — importing this module
+never touches jax device state (required by the dry-run contract)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests / elastic re-mesh use small shapes)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def host_device_mesh(model_parallel: int = 1, pods: int = 1):
+    """Best-effort mesh over whatever devices exist (CPU smoke runs)."""
+    n = len(jax.devices())
+    mp = model_parallel if n % model_parallel == 0 else 1
+    dp = n // mp // pods
+    if pods > 1:
+        return make_mesh((pods, dp, mp), ("pod", "data", "model"))
+    return make_mesh((dp, mp), ("data", "model"))

@@ -1,0 +1,294 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked
+online-softmax with static causal/window chunk skipping), GLU MLPs.
+
+Attention has two execution paths with identical semantics:
+  * pure-jnp chunked attention (lowers everywhere; used for dry-run/roofline and
+    CPU smoke tests) — python-unrolled chunk loops so HLO FLOPs are *honest*
+    (no scan-body undercounting) and memory stays O(S * chunk);
+  * Pallas kernels (`repro.kernels`) for the TPU deployment path
+    (``cfg.use_pallas``), validated against the same reference semantics.
+
+``AxisCtx`` threads the mesh + axis names through the model so activations can
+carry GSPMD sharding constraints (batch -> data axes, heads/ffn -> model axis,
+optional sequence-parallel residuals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDecl
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    """Mesh context for activation sharding constraints (None = no mesh)."""
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    seq_shard: bool = False          # sequence-parallel residual streams
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch(self) -> Any:
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    def residual(self, x: jax.Array) -> jax.Array:
+        """(B, S, D) residual stream: batch over data, optionally seq over model."""
+        seq = self.model_axis if self.seq_shard else None
+        return self.constrain(x, P(self.batch(), seq, None))
+
+    def heads(self, x: jax.Array) -> jax.Array:
+        """(B, S, H, dh): heads over model."""
+        return self.constrain(x, P(self.batch(), None, self.model_axis, None))
+
+    def ffn(self, x: jax.Array) -> jax.Array:
+        """(B, S, F): hidden over model."""
+        return self.constrain(x, P(self.batch(), None, self.model_axis))
+
+
+NULL_CTX = AxisCtx()
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh) or (..., H, dh) with positions broadcastable to S."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure jnp; honest-FLOPs unrolled loops)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      chunk: int = 2048, causal_skip: bool = True,
+                      q_offset: int = 0) -> jax.Array:
+    """GQA attention, O(S*chunk) memory.
+
+    q: (b, sq, hq, dh); k, v: (b, sk, hkv, dh).  ``causal_skip`` statically
+    drops (q_chunk, kv_chunk) pairs that are entirely masked (future chunks
+    and, with a sliding window, chunks behind the window) — the beyond-paper
+    FLOPs optimization logged in EXPERIMENTS.md §Perf.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, group, dh)
+    outs = []
+    n_q = -(-sq // chunk)
+    n_k = -(-sk // chunk)
+    for i in range(n_q):
+        q0, q1 = i * chunk, min((i + 1) * chunk, sq)
+        qi = qg[:, q0:q1]                     # model dtype; scale after QK
+        m = jnp.full((b, q1 - q0, hkv, group), -1e30, jnp.float32)
+        l = jnp.zeros((b, q1 - q0, hkv, group), jnp.float32)
+        acc = jnp.zeros((b, q1 - q0, hkv, group, dh), jnp.float32)
+        for j in range(n_k):
+            k0, k1 = j * chunk, min((j + 1) * chunk, sk)
+            if causal_skip and causal and k0 > (q1 - 1) + q_offset:
+                continue                                  # entirely future
+            if causal_skip and window is not None and \
+                    (q0 + q_offset) - (k1 - 1) >= window:
+                continue                                  # behind the window
+            kj = k[:, k0:k1]
+            vj = v[:, k0:k1]
+            # QK in model dtype with f32 accumulation; fold scale afterwards
+            # so bf16 q/k reads replace f32 copies (§Perf).
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = jnp.arange(q0, q1)[:, None] + q_offset
+            kpos = jnp.arange(k0, k1)[None, :]
+            mask = jnp.ones((q1 - q0, k1 - k0), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= qpos - kpos < window
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            # probabilities stream to the PV matmul in the model dtype
+            # (values <= 1 after max-subtraction; flash-attention-style) —
+            # halves the dominant (q,k)-chunk HBM traffic.  Accumulators
+            # stay f32 (§Perf).
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(q.dtype),
+                            vj.astype(q.dtype),
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.reshape(b, q1 - q0, hq, dh))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         length: jax.Array, *, window: Optional[int] = None
+                         ) -> jax.Array:
+    """Single-token GQA attention over a padded cache.
+
+    q: (b, hq, dh); caches: (b, s_max, hkv, dh); length: scalar/[b] valid len.
+    """
+    b, hq, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    length = jnp.broadcast_to(jnp.asarray(length), (b,))
+    qg = q.reshape(b, hkv, group, dh).astype(jnp.float32) / math.sqrt(dh)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(s)[None, :]
+    valid = kpos < length[:, None]
+    if window is not None:
+        valid &= (length[:, None] - 1 - kpos) < window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention module (params + apply for train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attention_decls(d_model: int, n_heads: int, n_kv_heads: int,
+                    head_dim: int) -> Dict[str, ParamDecl]:
+    return {
+        "wq": ParamDecl((d_model, n_heads * head_dim), ("fsdp", "tp")),
+        "wk": ParamDecl((d_model, n_kv_heads * head_dim), ("fsdp", "tp")),
+        "wv": ParamDecl((d_model, n_kv_heads * head_dim), ("fsdp", "tp")),
+        "wo": ParamDecl((n_heads * head_dim, d_model), ("tp", "fsdp")),
+    }
+
+
+def attention_apply(p, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+                    head_dim: int, rope_theta: float, ctx: AxisCtx = NULL_CTX,
+                    positions: Optional[jax.Array] = None,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_inputs: Optional[jax.Array] = None,
+                    attn_chunk: int = 2048, causal_skip: bool = True,
+                    use_pallas: bool = False) -> jax.Array:
+    """Full-sequence attention (train / prefill).  ``kv_inputs`` switches to
+    cross-attention (no mask, no rope on kv source positions)."""
+    b, s, _ = x.shape
+    kv_src = x if kv_inputs is None else kv_inputs
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], n_kv_heads, head_dim)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], n_kv_heads, head_dim)
+    q, k = ctx.heads(q), ctx.heads(k)
+    if kv_inputs is None:
+        if positions is None:
+            positions = jnp.arange(s)
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal and kv_inputs is None,
+            window=window)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = chunked_attention(q, k, v, causal=causal and kv_inputs is None,
+                                window=window, chunk=attn_chunk,
+                                causal_skip=causal_skip)
+    out = ctx.heads(out)
+    return ctx.residual(out.reshape(b, s, n_heads * head_dim) @ p["wo"])
+
+
+def attention_decode(p, x: jax.Array, cache: Dict[str, jax.Array], *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float, ctx: AxisCtx = NULL_CTX,
+                     window: Optional[int] = None,
+                     use_pallas: bool = False):
+    """One-token decode.  x: (b, d); cache: {k, v: (b, s_max, hkv, dh),
+    handled by caller; this fn reads `length` (scalar int32) from cache}."""
+    b, _ = x.shape
+    length = cache["length"]                              # tokens already cached
+    q = (x @ p["wq"]).reshape(b, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, n_kv_heads, head_dim)
+    q = rope(q[:, None], jnp.asarray(length)[None], rope_theta)[:, 0]
+    k = rope(k[:, None], jnp.asarray(length)[None], rope_theta)[:, 0]
+    # Sliding-window caches are rings: write at length % s_max.
+    s_max = cache["k"].shape[1]
+    slot = length % s_max if window is not None else length
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k[:, None].astype(
+        cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v[:, None].astype(
+        cache["v"].dtype), (0, slot, 0, 0))
+    new_len = length + 1
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(
+            q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+            jnp.broadcast_to(jnp.minimum(new_len, s_max), (b,)), window=window)
+    else:
+        out = decode_attention_jnp(q, k_cache, v_cache,
+                                   jnp.minimum(new_len, s_max), window=window)
+    y = ctx.constrain(out.reshape(b, n_heads * head_dim) @ p["wo"],
+                      P(ctx.batch(), None))
+    new_cache = {"k": k_cache, "v": v_cache, "length": new_len}
+    return y, new_cache
+
+
+def attention_cache(b: int, s_max: int, n_kv_heads: int, head_dim: int,
+                    dtype=jnp.bfloat16, window: Optional[int] = None):
+    s_alloc = min(s_max, window) if window is not None else s_max
+    return {
+        "k": jnp.zeros((b, s_alloc, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((b, s_alloc, n_kv_heads, head_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def mlp_decls(d_model: int, d_ff: int, act: str) -> Dict[str, ParamDecl]:
+    decls = {
+        "wi": ParamDecl((d_model, d_ff), ("fsdp", "tp")),
+        "wo": ParamDecl((d_ff, d_model), ("tp", "fsdp")),
+    }
+    if act in ("swiglu", "geglu"):
+        decls["wg"] = ParamDecl((d_model, d_ff), ("fsdp", "tp"))
+    return decls
+
+
+def mlp_apply(p, x: jax.Array, *, act: str, ctx: AxisCtx = NULL_CTX) -> jax.Array:
+    h = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif act == "geglu":
+        h = jax.nn.gelu((x @ p["wg"]).astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    h = ctx.ffn(h) if h.ndim == 3 else h
+    return h @ p["wo"]

@@ -1,0 +1,508 @@
+"""Decoder-only LM assembly for the full architecture pool.
+
+One ``TransformerLM`` covers every family via config:
+  dense / moe            — pre-norm attention + (Glu-)MLP / MoE blocks
+  audio (musicgen)       — same backbone, embedding-frontend stub
+  vlm (llama-3.2-vision) — standalone cross-attention layers every
+                           ``cross_attn_every`` decoder layers
+  ssm (mamba2)           — Mamba2-SSD blocks, attention-free
+  hybrid (zamba2)        — Mamba2 blocks + one *shared* attention block applied
+                           every ``attn_every`` layers
+
+Periodic blocks are **segmented**, not `lax.cond`-gated: the layer stack is
+split at the periodic sites and each segment's plain layers run under their own
+``jax.lax.scan`` (python loop over segments).  This keeps HLO cost honest —
+`cost_analysis` charges `cond` branches whether or not they execute (verified
+in-container), which would corrupt the roofline for 1-in-k periodic blocks.
+``scan_layers=False`` unrolls everything (used by the roofline probes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as Ly
+from repro.models import moe as Moe
+from repro.models import ssm as Ssm
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDecl, abstract_params, init_params, stack
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def _block_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "ln1": ParamDecl((d,), (None,), init="ones"),
+            "ssm": Ssm.ssm_decls(d, cfg.d_inner, cfg.ssm_state,
+                                 cfg.ssm_nheads, cfg.ssm_conv),
+        }
+    block = {
+        "ln1": ParamDecl((d,), (None,), init="ones"),
+        "attn": Ly.attention_decls(d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_),
+        "ln2": ParamDecl((d,), (None,), init="ones"),
+    }
+    if cfg.n_experts:
+        block["moe"] = Moe.moe_decls(d, cfg.d_ff, cfg.n_experts, cfg.act,
+                                     cfg.moe_shard)
+    else:
+        block["mlp"] = Ly.mlp_decls(d, cfg.d_ff, cfg.act)
+    return block
+
+
+def _shared_attn_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDecl((d,), (None,), init="ones"),
+        "attn": Ly.attention_decls(d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_),
+        "ln2": ParamDecl((d,), (None,), init="ones"),
+        "mlp": Ly.mlp_decls(d, cfg.d_ff or 4 * d, "gelu"),
+    }
+
+
+def _cross_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln": ParamDecl((d,), (None,), init="ones"),
+        "attn": Ly.attention_decls(d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_),
+        "gate": ParamDecl((1,), (None,), init="zeros"),
+    }
+
+
+def n_sites(cfg: ModelConfig) -> int:
+    every = cfg.attn_every if cfg.family == "hybrid" else cfg.cross_attn_every
+    return -(-cfg.n_layers // every) if every else 0
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[Optional[int], int, int]]:
+    """[(site_index | None, layer_start, layer_end)] covering all layers."""
+    every = (cfg.attn_every if cfg.family == "hybrid"
+             else cfg.cross_attn_every if cfg.family == "vlm" else 0)
+    if not every:
+        return [(None, 0, cfg.n_layers)]
+    out = []
+    for i, s in enumerate(range(0, cfg.n_layers, every)):
+        out.append((i, s, min(s + every, cfg.n_layers)))
+    return out
+
+
+def param_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    decls: Dict[str, Any] = {
+        "embed": ParamDecl((v, d), ("tp", "fsdp"), init="small_normal"),
+        "blocks": stack(_block_decls(cfg), cfg.n_layers),
+        "final_norm": ParamDecl((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl((v, d), ("tp", "fsdp"),
+                                     init="small_normal")
+    if cfg.family == "hybrid" and cfg.attn_every:
+        decls["shared_attn"] = _shared_attn_decls(cfg)     # one shared block
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        decls["cross"] = stack(_cross_decls(cfg), n_sites(cfg))
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_kwargs(cfg: ModelConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+
+
+def _dense_block(bp, x, cfg: ModelConfig, ctx: Ly.AxisCtx) -> jax.Array:
+    h = Ly.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = Ly.attention_apply(bp["attn"], h, ctx=ctx, window=cfg.window,
+                           attn_chunk=cfg.attn_chunk,
+                           causal_skip=cfg.causal_skip,
+                           use_pallas=cfg.use_pallas, **_attn_kwargs(cfg))
+    x = x + h
+    h = Ly.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        h = Moe.moe_apply(bp["moe"], h, n_experts=cfg.n_experts,
+                          top_k=cfg.top_k, act=cfg.act,
+                          capacity_factor=cfg.capacity_factor,
+                          router_group=cfg.router_group,
+                          dispatch_mode=cfg.dispatch_mode,
+                          moe_shard=cfg.moe_shard, ctx=ctx)
+    else:
+        h = Ly.mlp_apply(bp["mlp"], h, act=cfg.act, ctx=ctx)
+    return ctx.residual(x + h)
+
+
+def _ssm_block(bp, x, cfg: ModelConfig, ctx: Ly.AxisCtx) -> jax.Array:
+    h = Ly.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = Ssm.ssm_apply(bp["ssm"], h, n_state=cfg.ssm_state,
+                      n_heads=cfg.ssm_nheads, head_dim=cfg.ssm_headdim,
+                      d_conv=cfg.ssm_conv, chunk=cfg.ssm_chunk, ctx=ctx)
+    return ctx.residual(x + h)
+
+
+def _shared_attn_block(sp, x, cfg: ModelConfig, ctx: Ly.AxisCtx) -> jax.Array:
+    h = Ly.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    h = Ly.attention_apply(sp["attn"], h, ctx=ctx, attn_chunk=cfg.attn_chunk,
+                           causal_skip=cfg.causal_skip,
+                           use_pallas=cfg.use_pallas, **_attn_kwargs(cfg))
+    x = x + h
+    h = Ly.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return ctx.residual(x + Ly.mlp_apply(sp["mlp"], h, act="gelu", ctx=ctx))
+
+
+def _cross_block(cp, x, image_embeds, cfg: ModelConfig,
+                 ctx: Ly.AxisCtx) -> jax.Array:
+    c = Ly.rms_norm(x, cp["ln"], cfg.norm_eps)
+    c = Ly.attention_apply(cp["attn"], c, ctx=ctx, kv_inputs=image_embeds,
+                           attn_chunk=cfg.attn_chunk,
+                           use_pallas=cfg.use_pallas, **_attn_kwargs(cfg))
+    gate = jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype)
+    return ctx.residual(x + gate * c)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens_or_embeds: jax.Array,
+                 ctx: Ly.AxisCtx) -> jax.Array:
+    if cfg.embed_inputs:
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = tokens_or_embeds.astype(dtype)
+    else:
+        x = params["embed"][tokens_or_embeds]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return ctx.residual(x)
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: jax.Array,
+                       ctx: Ly.AxisCtx) -> jax.Array:
+    x = Ly.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,vd->...v", x, head)
+    if cfg.logit_softcap:
+        cap = cfg.logit_softcap
+        logits = cap * jnp.tanh(logits.astype(jnp.float32) / cap)
+    spec = (P(ctx.batch(), None, ctx.model_axis) if logits.ndim == 3
+            else P(ctx.batch(), ctx.model_axis))
+    return ctx.constrain(logits.astype(jnp.float32), spec)
+
+
+def _run_segment(params_seg, x, cfg: ModelConfig, ctx: Ly.AxisCtx):
+    """Scan (or unroll) the plain layers of one segment."""
+    block = _ssm_block if cfg.family in ("ssm", "hybrid") else _dense_block
+
+    def body(x, bp):
+        return block(bp, x, cfg, ctx)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        def scan_body(x, bp):
+            return body(x, bp), None
+        x, _ = jax.lax.scan(scan_body, x, params_seg)
+        return x
+    n = jax.tree.leaves(params_seg)[0].shape[0]
+    for i in range(n):
+        x = body(x, jax.tree.map(lambda a: a[i], params_seg))
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: Ly.AxisCtx = Ly.NULL_CTX) -> jax.Array:
+    """Full-sequence forward -> float32 logits (B, S, padded_vocab)."""
+    x = embed_tokens(params, cfg, batch["inputs"], ctx)
+    image_embeds = batch.get("image_embeds")
+    for site, s0, s1 in segments(cfg):
+        if site is not None and cfg.family == "hybrid":
+            x = _shared_attn_block(params["shared_attn"], x, cfg, ctx)
+        elif site is not None and cfg.family == "vlm":
+            cp = jax.tree.map(lambda a: a[site], params["cross"])
+            x = _cross_block(cp, x, image_embeds, cfg, ctx)
+        seg = jax.tree.map(lambda a: a[s0:s1], params["blocks"])
+        x = _run_segment(seg, x, cfg, ctx)
+    return logits_from_hidden(params, cfg, x, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def vocab_mask(cfg: ModelConfig) -> Optional[jax.Array]:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: Ly.AxisCtx = Ly.NULL_CTX) -> Tuple[jax.Array, Dict[str, Any]]:
+    logits = forward(params, cfg, batch, ctx)
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+    weights = batch.get("loss_mask", jnp.ones_like(picked))
+    loss = -jnp.sum(picked * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches and decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L = cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        one = Ssm.ssm_cache(batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state, cfg.ssm_conv, cfg.d_inner, dtype)
+        cache: Dict[str, Any] = {"layers": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), one)}
+        if cfg.family == "hybrid" and cfg.attn_every:
+            site = Ly.attention_cache(batch, s_max, cfg.n_kv_heads,
+                                      cfg.head_dim_, dtype)
+            cache["shared_attn"] = [
+                jax.tree.map(jnp.copy, site) for _ in range(n_sites(cfg))]
+        return cache
+    one = Ly.attention_cache(batch, s_max, cfg.n_kv_heads, cfg.head_dim_,
+                             dtype, window=cfg.window)
+    cache = {"layers": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), one)}
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        cache["image_kv"] = {
+            "k": jnp.zeros((n_sites(cfg), batch, cfg.n_image_tokens,
+                            cfg.n_kv_heads, cfg.head_dim_), dtype),
+            "v": jnp.zeros((n_sites(cfg), batch, cfg.n_image_tokens,
+                            cfg.n_kv_heads, cfg.head_dim_), dtype),
+        }
+    return cache
+
+
+def _decode_segment(params_seg, cache_seg, x, cfg: ModelConfig,
+                    ctx: Ly.AxisCtx):
+    """Scan the plain layers of one segment in decode mode."""
+    if cfg.family in ("ssm", "hybrid"):
+        def body(x, inp):
+            bp, lc = inp
+            h = Ly.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            h, lc = Ssm.ssm_decode(bp["ssm"], h, lc, n_state=cfg.ssm_state,
+                                   n_heads=cfg.ssm_nheads,
+                                   head_dim=cfg.ssm_headdim, ctx=ctx)
+            return x + h, lc
+    else:
+        def body(x, inp):
+            bp, lc = inp
+            h = Ly.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            h, lc = Ly.attention_decode(bp["attn"], h, lc, ctx=ctx,
+                                        window=cfg.window,
+                                        use_pallas=cfg.use_pallas,
+                                        **_attn_kwargs(cfg))
+            x = x + h
+            h = Ly.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                h = Moe.moe_apply(bp["moe"], h[:, None],
+                                  n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                  act=cfg.act,
+                                  capacity_factor=cfg.capacity_factor,
+                                  router_group=cfg.router_group,
+                                  dispatch_mode=cfg.dispatch_mode,
+                                  moe_shard=cfg.moe_shard,
+                                  ctx=ctx)[:, 0]
+            else:
+                h = Ly.mlp_apply(bp["mlp"], h, act=cfg.act, ctx=ctx)
+            return x + h, lc
+
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, (params_seg, cache_seg))
+    n = jax.tree.leaves(params_seg)[0].shape[0]
+    new_caches = []
+    for i in range(n):
+        x, lc = body(x, (jax.tree.map(lambda a: a[i], params_seg),
+                         jax.tree.map(lambda a: a[i], cache_seg)))
+        new_caches.append(lc)
+    return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any],
+                token_or_embed: jax.Array,
+                ctx: Ly.AxisCtx = Ly.NULL_CTX):
+    """One-token decode: (B,) ids (or (B, D) embeds) -> (logits, new cache)."""
+    if cfg.embed_inputs:
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = token_or_embed.astype(dtype)
+    else:
+        x = params["embed"][token_or_embed]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    b = x.shape[0]
+    new_cache = dict(cache)
+    new_layer_caches = []
+    if cfg.family == "hybrid":
+        new_cache["shared_attn"] = list(cache["shared_attn"])
+
+    for site, s0, s1 in segments(cfg):
+        if site is not None and cfg.family == "hybrid":
+            sp = params["shared_attn"]
+            sc = cache["shared_attn"][site]
+            h = Ly.rms_norm(x, sp["ln1"], cfg.norm_eps)
+            h, sc = Ly.attention_decode(sp["attn"], h, sc, ctx=ctx,
+                                        use_pallas=cfg.use_pallas,
+                                        **_attn_kwargs(cfg))
+            x = x + h
+            h = Ly.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + Ly.mlp_apply(sp["mlp"], h, act="gelu", ctx=ctx)
+            new_cache["shared_attn"][site] = sc
+        elif site is not None and cfg.family == "vlm":
+            cp = jax.tree.map(lambda a: a[site], params["cross"])
+            ik = jax.tree.map(lambda a: a[site], cache["image_kv"])
+            c = Ly.rms_norm(x, cp["ln"], cfg.norm_eps)
+            q = (c @ cp["attn"]["wq"]).reshape(b, cfg.n_heads, cfg.head_dim_)
+            o = Ly.decode_attention_jnp(q, ik["k"], ik["v"],
+                                        jnp.int32(ik["k"].shape[1]))
+            o = o.reshape(b, cfg.n_heads * cfg.head_dim_) @ cp["attn"]["wo"]
+            gate = jnp.tanh(cp["gate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * o
+        seg_p = jax.tree.map(lambda a: a[s0:s1], params["blocks"])
+        seg_c = jax.tree.map(lambda a: a[s0:s1], cache["layers"])
+        x, seg_c = _decode_segment(seg_p, seg_c, x, cfg, ctx)
+        new_layer_caches.append(seg_c)
+
+    new_cache["layers"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_caches)
+    logits = logits_from_hidden(params, cfg, x, ctx)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: Ly.AxisCtx = Ly.NULL_CTX) -> jax.Array:
+    """Prefill = full-sequence forward returning last-position logits."""
+    logits = forward(params, cfg, batch, ctx)
+    return logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Init / abstract helpers
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key: jax.Array):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return init_params(param_decls(cfg), key, dtype)
+
+
+def sharding_rules(cfg: ModelConfig, mesh=None):
+    from repro.models.params import LOGICAL_RULES, dp_only_rules
+    if mesh is not None and cfg.tp_strategy == "dp_only":
+        return dp_only_rules(mesh)
+    if mesh is not None and "pod" in mesh.shape:
+        # Multi-pod: ZeRO the FSDP storage axis across pods too — params,
+        # grads, and optimizer state shard over 32 ways instead of 16
+        # (llama3-405b grad accumulator 6.4 -> 3.2 GB/device).
+        return dict(LOGICAL_RULES, fsdp=("pod", "data"))
+    return LOGICAL_RULES
+
+
+def abstract(cfg: ModelConfig, mesh=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return abstract_params(param_decls(cfg), dtype, mesh,
+                           rules=sharding_rules(cfg, mesh))
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, mesh,
+                 batch_axes: Tuple[str, ...] = ("data",),
+                 model_axis: str = "model") -> Dict[str, Any]:
+    """PartitionSpec tree matching ``init_cache``'s structure.
+
+    Sharding policy (DESIGN.md §4):
+      * batch dim  -> batch_axes when divisible (decode_32k), else replicated
+        (long_500k has batch 1);
+      * KV heads   -> model axis when divisible, else the cache *sequence* dim
+        is sharded over model (the paged-KV analogue — keeps a 2 TB llama-405b
+        32k cache under 16 GB/chip even with kv=8 < tp=16);
+      * SSM state heads -> model axis; conv buffers' channel dim -> model.
+    """
+    tp = mesh.shape[model_axis]
+    nrow = 1
+    for a in batch_axes:
+        nrow *= mesh.shape[a]
+    baxes = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    b_ax = baxes if batch % nrow == 0 else None
+
+    def attn_kv(s_alloc: int, stacked: bool):
+        kv_ax = model_axis if cfg.n_kv_heads % tp == 0 else None
+        seq_ax = (model_axis if kv_ax is None and s_alloc % tp == 0 else None)
+        spec = P(b_ax, seq_ax, kv_ax, None)
+        return P(None, *spec) if stacked else spec
+
+    L = cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        h_ax = model_axis if cfg.ssm_nheads % tp == 0 else None
+        di_ax = model_axis if cfg.d_inner % tp == 0 else None
+        pspecs: Dict[str, Any] = {"layers": {
+            "state": P(None, b_ax, h_ax, None, None),
+            "conv_x": P(None, b_ax, None, di_ax),
+            "conv_B": P(None, b_ax, None, None),
+            "conv_C": P(None, b_ax, None, None),
+            "length": P(None),
+        }}
+        if cfg.family == "hybrid" and cfg.attn_every:
+            site = {"k": attn_kv(0, False), "v": attn_kv(0, False),
+                    "length": P()}
+            pspecs["shared_attn"] = [dict(site) for _ in range(n_sites(cfg))]
+        return pspecs
+    pspecs = {"layers": {"k": attn_kv(0, True), "v": attn_kv(0, True),
+                         "length": P(None)}}
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        kv_ax = model_axis if cfg.n_kv_heads % tp == 0 else None
+        pspecs["image_kv"] = {"k": P(None, b_ax, None, kv_ax, None),
+                              "v": P(None, b_ax, None, kv_ax, None)}
+    return pspecs
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, mesh=None,
+                   batch_axes: Tuple[str, ...] = ("data",),
+                   model_axis: str = "model", dtype=jnp.bfloat16):
+    """ShapeDtypeStruct cache (no allocation) with production shardings."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, s_max, dtype))
+    if mesh is None:
+        return shapes
+    specs = cache_pspecs(cfg, batch, mesh, batch_axes, model_axis)
+
+    def attach(sds, spec):
+        # seq-dim sharding fallback needs the actual allocated length
+        if len(spec) == len(sds.shape):
+            names = list(spec)
+        else:
+            names = list(spec) + [None] * (len(sds.shape) - len(spec))
+        fixed = []
+        for dim, ax in zip(sds.shape, names):
+            if ax is None:
+                fixed.append(None)
+                continue
+            sizes = ax if isinstance(ax, tuple) else (ax,)
+            nshard = 1
+            for a in sizes:
+                nshard *= mesh.shape[a]
+            fixed.append(ax if dim % nshard == 0 else None)
+        sh = jax.sharding.NamedSharding(mesh, P(*fixed))
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree.map(attach, shapes, specs)

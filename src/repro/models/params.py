@@ -1,0 +1,143 @@
+"""Declarative parameters: shapes + logical sharding axes in one tree.
+
+Modules declare ``ParamDecl(shape, axes, init)`` leaves; the same tree then
+materializes as random arrays (smoke tests / examples), as ShapeDtypeStructs
+(dry-run — no allocation), or as NamedShardings (mesh placement).  Logical axes:
+
+  "tp"    tensor-parallel        -> mesh "model"
+  "fsdp"  fully-sharded params   -> mesh "data"   (ZeRO-3-style storage)
+  "ep"    expert-parallel        -> mesh "model"
+  None    replicated dimension
+
+Divisibility fallback: if a dimension is not divisible by its mesh axis size the
+axis is dropped (replicated) — e.g. kv_heads=8 on a 16-way TP axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES = {"tp": "model", "fsdp": "data", "ep": "model"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones | small_normal
+    scale: Optional[float] = None   # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_decl)
+
+
+def map_decls(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_decl)
+
+
+def stack(decl_tree, n: int):
+    """Prepend a stacked-layer dimension (scan axis) to every decl."""
+    return map_decls(
+        lambda d: ParamDecl((n,) + d.shape, (None,) + d.axes, d.init, d.scale),
+        decl_tree)
+
+
+def n_params(decl_tree) -> int:
+    return sum(math.prod(d.shape) for d in _leaves(decl_tree))
+
+
+def abstract_params(decl_tree, dtype=jnp.bfloat16,
+                    mesh: Optional[Mesh] = None, rules=None):
+    """ShapeDtypeStruct tree for AOT lowering; attaches shardings if a mesh is
+    given (so ``jit(...).lower(params)`` sees the production layout)."""
+    def make(d: ParamDecl):
+        sh = param_sharding(d, mesh, rules) if mesh is not None else None
+        dt = jnp.float32 if d.init in ("zeros", "ones") else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sh)
+    return map_decls(make, decl_tree)
+
+
+def init_params(decl_tree, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize real parameters (fan-in-scaled normal init)."""
+    flat, treedef = jax.tree.flatten(decl_tree, is_leaf=is_decl)
+    keys = jax.random.split(key, len(flat))
+
+    def make(d: ParamDecl, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, jnp.float32)
+        if d.init == "ones":
+            return jnp.ones(d.shape, jnp.float32)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        if d.init == "small_normal":
+            scale = 0.02
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(d, k) for d, k in zip(flat, keys)])
+
+
+def dp_only_rules(mesh: Mesh):
+    """Rules for small archs where TP is pure collective overhead: params
+    replicated over "model" (no tp/ep), FSDP storage over every axis, and the
+    *batch* sharded over "model" as extra data parallelism (beyond-paper
+    §Perf lever — see EXPERIMENTS.md musicgen hillclimb)."""
+    fsdp = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    return {"tp": None, "ep": None, "fsdp": fsdp}
+
+
+def _axis_size(mesh: Mesh, mesh_ax) -> int:
+    if isinstance(mesh_ax, tuple):
+        n = 1
+        for a in mesh_ax:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(mesh_ax, 1)
+
+
+def partition_spec(d: ParamDecl, mesh: Optional[Mesh], rules=None) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback.  ``rules``
+    maps logical axis -> mesh axis (or tuple of axes, or None = replicate)."""
+    if mesh is None:
+        return P()
+    rules = rules or LOGICAL_RULES
+    names = []
+    for dim, ax in zip(d.shape, d.axes):
+        if ax is None:
+            names.append(None)
+            continue
+        mesh_ax = rules.get(ax, ax)
+        if mesh_ax is None:
+            names.append(None)
+            continue
+        single = (mesh_ax,) if not isinstance(mesh_ax, tuple) else mesh_ax
+        if all(a in mesh.shape for a in single) and \
+                dim % _axis_size(mesh, mesh_ax) == 0:
+            names.append(mesh_ax)
+        else:
+            names.append(None)                      # replicate (fallback)
+    return P(*names)
+
+
+def param_sharding(d: ParamDecl, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(d, mesh, rules))
+
+
+def tree_shardings(decl_tree, mesh: Mesh, rules=None):
+    return map_decls(lambda d: param_sharding(d, mesh, rules), decl_tree)
+
+
+def tree_pspecs(decl_tree, mesh: Mesh, rules=None):
+    return map_decls(lambda d: partition_spec(d, mesh, rules), decl_tree)

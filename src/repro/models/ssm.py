@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train path + O(1) decode.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; intra-chunk terms are computed as masked "attention-like"
+einsums (MXU-friendly quadratic-in-chunk matmuls), inter-chunk state passing is
+a log-depth ``jax.lax.associative_scan`` over per-chunk (decay, state) pairs —
+fully parallel on TPU and, unlike a sequential `lax.scan`, honestly counted by
+`cost_analysis` (no while-loop body undercount).
+
+Decode is the classic SSM recurrence: constant state
+``h <- exp(dt*A) h + dt * x Bᵀ`` — the reason SSM/hybrid archs run long_500k.
+
+Projections are declared separately (wz/wx/wB/wC/wdt) instead of one fused
+in_proj so each output dimension can carry its own TP sharding without uneven
+splits (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import AxisCtx, NULL_CTX, rms_norm
+from repro.models.params import ParamDecl
+
+
+def ssm_decls(d_model: int, d_inner: int, n_state: int, n_heads: int,
+              d_conv: int) -> Dict[str, ParamDecl]:
+    return {
+        "wz": ParamDecl((d_model, d_inner), ("fsdp", "tp")),
+        "wx": ParamDecl((d_model, d_inner), ("fsdp", "tp")),
+        "wB": ParamDecl((d_model, n_state), ("fsdp", None)),
+        "wC": ParamDecl((d_model, n_state), ("fsdp", None)),
+        "wdt": ParamDecl((d_model, n_heads), ("fsdp", None)),
+        "conv_x": ParamDecl((d_conv, d_inner), (None, "tp"), init="small_normal"),
+        "conv_B": ParamDecl((d_conv, n_state), (None, None), init="small_normal"),
+        "conv_C": ParamDecl((d_conv, n_state), (None, None), init="small_normal"),
+        "A_log": ParamDecl((n_heads,), (None,), init="zeros"),
+        "D": ParamDecl((n_heads,), (None,), init="ones"),
+        "dt_bias": ParamDecl((n_heads,), (None,), init="zeros"),
+        "norm": ParamDecl((d_inner,), ("tp",), init="ones"),
+        "wo": ParamDecl((d_inner, d_model), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                                   # K<=4: unrolled taps
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i]
+    return out.astype(x.dtype)
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, chunk: int,
+                 h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.  x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm, Cm: (B,S,N) (single group).  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    # Precision policy (§Perf zamba2/mamba2 hillclimb): big streaming tensors
+    # (x, B, C, the (q,q,h) decay mask, chunk states at the einsum boundary)
+    # stay in the model dtype; dt / cumulative decays / accumulations are f32.
+    lowp = x.dtype if x.dtype != jnp.float32 else jnp.float32
+    xr = x.reshape(b, nc, q, h, p).astype(lowp)
+    dtr = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Br = Bm.reshape(b, nc, q, n).astype(lowp)
+    Cr = Cm.reshape(b, nc, q, n).astype(lowp)
+
+    dA = dtr * A[None, None, None, :]                     # (b,c,q,h), negative
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    total = cum[:, :, -1]                                 # (b,c,h)
+
+    # --- intra-chunk (quadratic in q, MXU matmuls) ---
+    # The (b,c,q,q,h) decay mask is the bytes hot-spot (§Perf zamba2
+    # hillclimb): fold CB into the same elementwise fusion as exp() so only
+    # ONE 5-D tensor is materialized (a 3-operand einsum would materialize a
+    # second CB*L product), and emit it in the model dtype — the MXU reads
+    # half the bytes; exp/cumsum stay f32 for stability.
+    CB = jnp.einsum("bcin,bcjn->bcij", Cr, Br,
+                    preferred_element_type=jnp.float32)   # (b,c,q,q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,c,i,j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(seg) * CB[..., None], 0.0).astype(lowp)
+    dtx = (xr.astype(jnp.float32) * dtr[..., None]).astype(lowp)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", L, dtx,
+                         preferred_element_type=jnp.float32)
+
+    # --- per-chunk terminal states ---
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)    # (b,c,q,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Br, (dtr * decay_to_end).astype(lowp), xr,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk associative scan over (decay, state) ---
+    chunk_decay = jnp.exp(total)                          # (b,c,h)
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dsc, ssc = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+    # State entering chunk c: scanned states of chunks < c, plus h0 decayed
+    # through every earlier chunk.
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    prev_states = jnp.concatenate(
+        [jnp.zeros_like(ssc[:, :1]), ssc[:, :-1]], axis=1)       # (b,c,h,p,n)
+    h0_decay = jnp.concatenate(
+        [jnp.ones((b, 1, h), jnp.float32), dsc[:, :-1]], axis=1)
+    prev = prev_states + h0[:, None] * h0_decay[..., None, None]
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cr, jnp.exp(cum).astype(lowp), prev.astype(lowp),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    h_final = ssc[:, -1] + h0 * dsc[:, -1][..., None, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_apply(p, x: jax.Array, *, n_state: int, n_heads: int, head_dim: int,
+              d_conv: int, chunk: int, ctx: AxisCtx = NULL_CTX) -> jax.Array:
+    """Full-sequence Mamba2 block.  x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    z = x @ p["wz"]                                       # (B,S,di)
+    xi = ctx.ffn(x @ p["wx"])
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["wdt"].astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H)
+    # silu in f32 for accuracy, but re-emit in the model dtype immediately:
+    # keeping these (B,S,d_inner) streams f32 tripled the SSD memory term
+    # (§Perf zamba2 hillclimb).
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_x"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(b, s, n_heads, head_dim)
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, n_heads * head_dim)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"])
+    return ctx.residual(y.astype(x.dtype) @ p["wo"])
+
+
+def ssm_cache(b: int, n_heads: int, head_dim: int, n_state: int, d_conv: int,
+              d_inner: int, dtype=jnp.bfloat16):
+    return {
+        "state": jnp.zeros((b, n_heads, head_dim, n_state), jnp.float32),
+        "conv_x": jnp.zeros((b, d_conv - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((b, d_conv - 1, n_state), dtype),
+        "conv_C": jnp.zeros((b, d_conv - 1, n_state), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _conv_step(buf: jax.Array, new: jax.Array, w: jax.Array):
+    """One causal-conv step.  buf: (B, K-1, C) past inputs; new: (B, C)."""
+    window = jnp.concatenate([buf, new[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out, window[:, 1:]
+
+
+def ssm_decode(p, x: jax.Array, cache, *, n_state: int, n_heads: int,
+               head_dim: int, ctx: AxisCtx = NULL_CTX):
+    """One-token decode.  x: (B, D)."""
+    b, _ = x.shape
+    z = x @ p["wz"]
+    xi, conv_x = _conv_step(cache["conv_x"], x @ p["wx"], p["conv_x"])
+    Bm, conv_B = _conv_step(cache["conv_B"], x @ p["wB"], p["conv_B"])
+    Cm, conv_C = _conv_step(cache["conv_C"], x @ p["wC"], p["conv_C"])
+    xi, Bm, Cm = jax.nn.silu(xi), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["wdt"].astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(b, n_heads, head_dim)
+    dA = jnp.exp(dt * A[None, :])                         # (B,H)
+    h_new = (cache["state"] * dA[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm) + p["D"][None, :, None] * xh
+    y = y.reshape(b, n_heads * head_dim)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    out = y.astype(x.dtype) @ p["wo"]
+    new_cache = {"state": h_new, "conv_x": conv_x.astype(cache["conv_x"].dtype),
+                 "conv_B": conv_B.astype(cache["conv_B"].dtype),
+                 "conv_C": conv_C.astype(cache["conv_C"].dtype),
+                 "length": cache["length"] + 1}
+    return out, new_cache
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """O(S^2)-free sequential oracle for tests: plain recurrence over time."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    hstate = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A[None, :])               # (b,h)
+        hstate = (hstate * dA[..., None, None]
+                  + jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], Bm[:, t]))
+        ys.append(jnp.einsum("bhpn,bn->bhp", hstate, Cm[:, t]))
+    return jnp.stack(ys, axis=1), hstate

@@ -1,0 +1,50 @@
+"""Elastic scaling: re-shard live state onto a different mesh.
+
+On node loss (or capacity growth) the surviving hosts build a smaller/larger
+mesh and ``remesh`` re-lays-out every array: checkpointed host copies ->
+device_put with the new shardings.  Combined with `io.checkpoint` this is the
+restart path: state saved on a 2x16x16 mesh restores cleanly onto 16x16 (or a
+4-device CPU test mesh) because checkpoints are mesh-agnostic host arrays.
+
+Divisibility fallbacks in `models.params.partition_spec` mean the same logical
+rules produce valid layouts on any mesh size.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+def remesh(tree: Tree, new_shardings: Tree) -> Tree:
+    """Re-layout every leaf onto its new sharding (host round-trip keeps the
+    implementation mesh-topology-agnostic; a production path would use
+    jax.device_put direct transfers where source/target overlap)."""
+    def move(x, s):
+        host = np.asarray(x)
+        return jax.device_put(host, s) if s is not None else jax.numpy.asarray(host)
+    return jax.tree.map(move, tree, new_shardings)
+
+
+def shrink_data_axis(mesh: Mesh, lost: int = 1) -> Mesh:
+    """Build the survivor mesh after losing `lost` data-parallel slices."""
+    axes = dict(mesh.shape)
+    if "data" not in axes or axes["data"] - lost < 1:
+        raise ValueError("cannot shrink below one data slice")
+    axes["data"] -= lost
+    names = tuple(axes)
+    n_needed = int(np.prod(list(axes.values())))
+    devs = np.asarray(mesh.devices).reshape(-1)[:n_needed]
+    return Mesh(devs.reshape(tuple(axes[n] for n in names)), names)
+
+
+def rebalance_batch(global_batch: int, mesh: Mesh) -> int:
+    """Largest per-step batch divisible by the new data-parallel degree."""
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    return (global_batch // dp) * dp

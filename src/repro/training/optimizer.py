@@ -1,0 +1,218 @@
+"""Optimizers (pure JAX, optax-free): AdamW and Adafactor + schedules.
+
+Adafactor (factored second moments) is the default for >=100B configs — Adam's
+8 bytes/param of state does not fit 256 x 16 GB for llama3-405b (DESIGN.md §5).
+Optimizer state inherits each parameter's sharding (ZeRO-style: state lives
+wherever the param shard lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"             # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decay)
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tuple[Tree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Tree) -> Dict[str, Tree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(grads: Tree, state: Dict[str, Tree], params: Tree,
+                 step: jax.Array, cfg: OptConfig):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mh, vh = m / bc1, v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x:
+                              isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x:
+                         isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x:
+                         isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+def _factored(p_shape, min_dim: int) -> bool:
+    return len(p_shape) >= 2 and p_shape[-1] >= min_dim and p_shape[-2] >= min_dim
+
+
+def adafactor_init(params: Tree, cfg: Optional[OptConfig] = None) -> Tree:
+    cfg = cfg or OptConfig(name="adafactor")
+
+    def init_one(p):
+        if _factored(p.shape, cfg.factored_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return jax.tree.map(init_one, params)
+
+
+def adafactor_update(grads: Tree, state: Tree, params: Tree, step: jax.Array,
+                     cfg: OptConfig):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    eps = 1e-30
+
+    def upd(g, s, p):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + eps
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            approx = r[..., None] * vc[..., None, :]
+            update = gf * jax.lax.rsqrt(jnp.maximum(approx, eps))
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            update = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_s = {"v": v}
+        # update clipping (RMS <= 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), new_s
+
+    # The state tree nests {"v"} / {"vr","vc"} under each param leaf — flatten
+    # against the param treedef with those dicts as leaves.
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(state, is_leaf=is_state)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Abstract optimizer state (for AOT lowering — mirrors opt_init structurally)
+# ---------------------------------------------------------------------------
+
+def opt_state_decls(decl_tree: Tree, cfg: OptConfig) -> Tree:
+    """ParamDecl tree for the optimizer state: same tree structure as
+    ``opt_init`` would produce, with sharding axes inherited from each param
+    (ZeRO-style: state lives wherever the param shard lives).  Adafactor's
+    factored moments drop the factored dimension's axis."""
+    from repro.models.params import ParamDecl, map_decls
+
+    if cfg.name == "sgd":
+        return {}
+    f32 = lambda d: ParamDecl(d.shape, d.axes, init="zeros")
+    if cfg.name == "adamw":
+        return {"m": map_decls(f32, decl_tree), "v": map_decls(f32, decl_tree)}
+    if cfg.name == "adafactor":
+        def one(d):
+            if _factored(d.shape, cfg.factored_min_dim):
+                return {"vr": ParamDecl(d.shape[:-1], d.axes[:-1],
+                                        init="zeros"),
+                        "vc": ParamDecl(d.shape[:-2] + d.shape[-1:],
+                                        d.axes[:-2] + d.axes[-1:],
+                                        init="zeros")}
+            return {"v": f32(d)}
+        return map_decls(one, decl_tree)
+    raise ValueError(cfg.name)
+
+
+def opt_abstract(decl_tree: Tree, cfg: OptConfig, mesh=None,
+                 rules=None) -> Tree:
+    """ShapeDtypeStruct optimizer state (with shardings if a mesh is given)."""
+    from repro.models.params import abstract_params
+    return abstract_params(opt_state_decls(decl_tree, cfg), mesh=mesh,
+                           rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def opt_init(params: Tree, cfg: OptConfig) -> Tree:
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    if cfg.name == "sgd":
+        return {}
+    raise ValueError(cfg.name)
+
+
+def opt_update(grads: Tree, state: Tree, params: Tree, step: jax.Array,
+               cfg: OptConfig):
+    if cfg.grad_clip:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adamw":
+        return adamw_update(grads, state, params, step, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_update(grads, state, params, step, cfg)
+    if cfg.name == "sgd":
+        lr = lr_schedule(cfg, step)
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads), state
+    raise ValueError(cfg.name)

@@ -1,0 +1,118 @@
+"""Serving: jitted decode step with sampling + a batched continuous-batching
+request loop (the inference-side driver for decode_32k / long_500k shapes)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.training.train_lib import make_axis_ctx
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 2048
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: int = 1
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """``serve_step(params, cache, token, key) -> (next_token, cache)``."""
+    ctx = make_axis_ctx(mesh, cfg)
+
+    def serve_step(params, cache, token, key):
+        logits, cache = lm.decode_step(params, cfg, cache, token, ctx)
+        mask = lm.vocab_mask(cfg)
+        if mask is not None:
+            logits = logits + mask
+        if scfg.temperature > 0:
+            nxt = jax.random.categorical(key, logits / scfg.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    ctx = make_axis_ctx(mesh, cfg)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, ctx)
+
+    return prefill_step
+
+
+class BatchedServer:
+    """Minimal continuous-batching loop over a fixed device batch.
+
+    Requests queue up; every free slot is filled with the next request's
+    prompt (teacher-forced through decode steps — the simple slot-refill
+    pattern; a production server would use a separate prefill engine).
+    Finished sequences (EOS or max_new_tokens) free their slot.
+    """
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 batch_size: int, mesh: Optional[Mesh] = None, seed: int = 0):
+        self.cfg, self.scfg, self.params = cfg, scfg, params
+        self.batch = batch_size
+        self.step_fn = jax.jit(make_serve_step(cfg, scfg, mesh))
+        self.key = jax.random.key(seed)
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32
+                 ) -> List[List[int]]:
+        out: List[List[int]] = [[] for _ in prompts]
+        queue = list(range(len(prompts)))
+        slots: List[Optional[int]] = [None] * self.batch
+        pending: Dict[int, List[int]] = {}      # slot -> prompt tokens left
+        produced = [0] * len(prompts)
+        cache = lm.init_cache(self.cfg, self.batch, self.scfg.max_seq_len)
+        token = jnp.zeros((self.batch,), jnp.int32)
+
+        def refill():
+            for s in range(self.batch):
+                if slots[s] is None and queue:
+                    rid = queue.pop(0)
+                    slots[s] = rid
+                    pending[s] = list(prompts[rid])
+
+        refill()
+        # NOTE: shared cache across slots means fresh slots see stale state in
+        # this minimal sim; a production server keeps per-slot caches /
+        # paged KV.  Fine for driver/e2e purposes.
+        while any(s is not None for s in slots):
+            tok_host = token.tolist() if hasattr(token, "tolist") else token
+            feed = []
+            for s in range(self.batch):
+                if slots[s] is None:
+                    feed.append(0)
+                elif pending.get(s):
+                    feed.append(pending[s].pop(0))
+                else:
+                    feed.append(int(tok_host[s]))
+            self.key, sub = jax.random.split(self.key)
+            token, cache = self.step_fn(self.params, cache,
+                                        jnp.asarray(feed, jnp.int32), sub)
+            tok_host = token.tolist()
+            for s in range(self.batch):
+                rid = slots[s]
+                if rid is None or pending.get(s):
+                    continue
+                t = int(tok_host[s])
+                out[rid].append(t)
+                produced[rid] += 1
+                if t == self.scfg.eos_id or produced[rid] >= max_new_tokens:
+                    slots[s] = None
+                    pending.pop(s, None)
+            refill()
+        return out

@@ -1,0 +1,180 @@
+"""Training step factory: loss -> grads -> (optional) sketched gradient
+compression -> optimizer, with python-unrolled gradient accumulation.
+
+Microbatching is unrolled in python (not `lax.scan`) so (a) `cost_analysis`
+on the lowered step counts every microbatch honestly, and (b) XLA reuses the
+single-microbatch activation buffers sequentially — the memory profile of real
+accumulation.
+
+The "pod" mesh axis is pure data parallelism: its gradient all-reduce is the
+cross-pod collective.  When ``compress_pods`` is on, that all-reduce runs on a
+random-projection *sketch* of each gradient block with error feedback — the
+paper's Section-3.3 operator ported to distributed training (DESIGN.md
+§Arch-applicability; beyond-paper, benchmarked separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.layers import AxisCtx
+from repro.training import optimizer as opt
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.OptConfig = dataclasses.field(default_factory=opt.OptConfig)
+    compress_pods: bool = False
+    compress_rank: int = 32
+    log_every: int = 10
+
+
+def make_axis_ctx(mesh: Optional[Mesh], cfg: ModelConfig) -> AxisCtx:
+    if mesh is None:
+        return AxisCtx()
+    if cfg.tp_strategy == "dp_only":
+        # Small-arch mode: "model" is extra data parallelism; no activation
+        # sharding constraints on heads/ffn (params are replicated there).
+        batch_axes = tuple(a for a in ("pod", "data", "model")
+                           if a in mesh.shape)
+        return AxisCtx(mesh=mesh, batch_axes=batch_axes, model_axis=None,
+                       seq_shard=False)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return AxisCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                   seq_shard=cfg.seq_shard_residuals)
+
+
+def default_opt_config(cfg: ModelConfig) -> opt.OptConfig:
+    """Adafactor for >=100B params (Adam state would not fit — DESIGN.md §5)."""
+    big = cfg.n_params() >= 100e9
+    return opt.OptConfig(name="adafactor" if big else "adamw",
+                         lr=1e-4 if big else 3e-4)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """Returns ``train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)``."""
+    ctx = make_axis_ctx(mesh, cfg)
+    mb = max(cfg.microbatches, 1)
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch, ctx)
+
+    def train_step(params, opt_state, batch, step):
+        n = batch["labels"].shape[0]
+        assert n % mb == 0, (n, mb)
+        sz = n // mb
+        if mb == 1:
+            loss_acc, grads = None, None
+            (loss_acc, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # `lax.scan` over microbatches: XLA provably reuses the body's
+            # activation buffers across iterations (python unrolling left the
+            # CPU scheduler co-allocating per-microbatch buffers — 84 GB/dev
+            # for llama3-405b; scan brings the peak to the single-microbatch
+            # working set).  Gradients accumulate in f32.
+            stacked = jax.tree.map(
+                lambda x: x.reshape((mb, sz) + x.shape[1:]), batch)
+            g0 = jax.eval_shape(lambda p: jax.grad(
+                lambda q: loss_fn(q, jax.tree.map(lambda x: x[0], stacked))[0]
+            )(p), params)
+            acc0 = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), g0)
+
+            def body(carry, sub):
+                loss_c, g_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sub)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (loss_c + loss, g_acc), None
+
+            (loss_acc, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), acc0), stacked)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        loss_acc = loss_acc / mb
+
+        gnorm = opt.global_norm(grads)
+        new_params, new_state = opt.opt_update(grads, opt_state, params, step,
+                                               tcfg.opt)
+        metrics = {"loss": loss_acc, "grad_norm": gnorm,
+                   "lr": opt.lr_schedule(tcfg.opt, step)}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Optional[Mesh],
+                   donate: bool = True):
+    step = make_train_step(cfg, tcfg, mesh)
+    kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+    return jax.jit(step, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for AOT lowering (the dry-run contract).
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Optional[Mesh], global_batch: int = 0,
+                   include_model: bool = False):
+    if mesh is None:
+        return None
+    axes = ("pod", "data", "model") if include_model else ("pod", "data")
+    batch_axes = tuple(a for a in axes if a in mesh.shape)
+    nrow = 1
+    for a in batch_axes:
+        nrow *= mesh.shape[a]
+    if global_batch and global_batch % nrow != 0:
+        # batch not divisible by the data-parallel degree (e.g. long_500k's
+        # global_batch=1): replicate over the row axes.
+        batch_axes = ()
+    first = batch_axes if batch_axes else None
+    return lambda spec_rest: NamedSharding(mesh, P(first, *spec_rest))
+
+
+def input_specs(cfg: ModelConfig, *, seq_len: int, global_batch: int,
+                kind: str, mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    train/prefill: token (or stub-embedding) batch + labels.
+    decode: one new token against a KV/SSM cache of ``seq_len`` (built by the
+    caller via ``lm.init_cache`` with abstract eval).
+    """
+    mk = batch_sharding(mesh, global_batch,
+                        include_model=cfg.tp_strategy == "dp_only")
+    sh = (lambda *rest: mk(rest)) if mk else (lambda *rest: None)
+    b, s = global_batch, seq_len
+    if kind in ("train", "prefill"):
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16,
+                                          sharding=sh(None, None))
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32,
+                                          sharding=sh(None))
+        batch = {"inputs": inputs,
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32,
+                                                sharding=sh(None))}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16,
+                sharding=sh(None, None))
+        return batch
+    if kind == "decode":
+        if cfg.embed_inputs:
+            tok = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16,
+                                       sharding=sh(None))
+        else:
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32, sharding=sh())
+        return {"token": tok}
+    raise ValueError(kind)

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device (the
+dry-run owns the 512-device placeholder world; see launch/dryrun.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,238 @@
+"""Distributed GBDT + dry-run plumbing.  Multi-device checks run in a
+subprocess with a forced host device count (the test process itself keeps the
+default 1 device per the dry-run contract)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_gbdt_matches_single_device():
+    """Sharded boost step (2x2 mesh, rows x outputs) must reproduce the
+    single-device trees and losses."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from repro.core.boosting import GBDTConfig, boost_step
+        from repro.core import distributed as GD
+        from repro.launch.mesh import make_mesh
+        from repro.data.pipeline import make_tabular
+        from repro.core import quantize as Q
+
+        cfg = GBDTConfig(loss="multiclass", n_outputs=8, depth=3, n_bins=16,
+                         sketch_method="top_outputs", sketch_k=2,
+                         learning_rate=0.3)
+        X, y = make_tabular("multiclass", 512, 6, 8, seed=0)
+        q = Q.fit_quantizer(X, 16)
+        codes = Q.apply_quantizer(q, jnp.asarray(X))
+        Y = jnp.asarray(y)
+        F = jnp.zeros((512, 8), jnp.float32)
+
+        # single-device round (top_outputs is deterministic => comparable)
+        # NOTE: boost_step donates F -> pass a fresh copy to each step.
+        key = jax.random.key(0)
+        F1, tree1 = boost_step(F.copy(), codes, Y, key, cfg)
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        step = GD.make_distributed_boost_step(mesh, cfg)
+        F2, tree2 = step(F.copy(), codes, Y, key)
+
+        np.testing.assert_array_equal(np.asarray(tree1.feat),
+                                      np.asarray(tree2.feat))
+        np.testing.assert_array_equal(np.asarray(tree1.thr),
+                                      np.asarray(tree2.thr))
+        np.testing.assert_allclose(np.asarray(tree1.value),
+                                   np.asarray(tree2.value), rtol=1e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(F1), np.asarray(F2),
+                                   rtol=1e-4, atol=1e-5)
+        print("DIST_OK")
+    """)
+    assert "DIST_OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_gbdt_feature_shard_matches():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.boosting import GBDTConfig
+        from repro.core import distributed as GD
+        from repro.launch.mesh import make_mesh
+        from repro.data.pipeline import make_tabular
+        from repro.core import quantize as Q
+
+        cfg = GBDTConfig(loss="multiclass", n_outputs=8, depth=3, n_bins=16,
+                         sketch_method="top_outputs", sketch_k=2,
+                         learning_rate=0.3)
+        X, y = make_tabular("multiclass", 512, 8, 8, seed=1)
+        q = Q.fit_quantizer(X, 16)
+        codes = Q.apply_quantizer(q, jnp.asarray(X))
+        Y = jnp.asarray(y)
+        F = jnp.zeros((512, 8), jnp.float32)
+        key = jax.random.key(0)
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        s_plain = GD.make_distributed_boost_step(mesh, cfg)
+        s_fs = GD.make_distributed_boost_step(mesh, cfg, feature_shard=True)
+        F1, t1 = s_plain(F, codes, Y, key)
+        F2, t2 = s_fs(F, codes, Y, key)
+        np.testing.assert_allclose(np.asarray(F1), np.asarray(F2),
+                                   rtol=1e-4, atol=1e-5)
+        print("FSHARD_OK")
+    """)
+    assert "FSHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_eval_matches_host_loss():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.boosting import GBDTConfig
+        from repro.core import distributed as GD
+        from repro.core import losses as L
+        from repro.launch.mesh import make_mesh
+        rng = np.random.default_rng(0)
+        F = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+        Y = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+        cfg = GBDTConfig(loss="multiclass", n_outputs=8)
+        mesh = make_mesh((2, 2), ("data", "model"))
+        ev = GD.make_distributed_eval(mesh, cfg)
+        got = float(ev(F, Y))
+        ref = float(L.get_loss("multiclass").value(F, Y))
+        assert abs(got - ref) < 1e-4, (got, ref)
+        print("EVAL_OK")
+    """)
+    assert "EVAL_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_lm_train_step_matches_unsharded():
+    """2x2 (data, model) sharded train step == single-device step."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import smoke_config
+        from repro.models import lm
+        from repro.launch.mesh import make_mesh
+        from repro.training import train_lib, optimizer as opt
+        cfg = smoke_config("gemma-7b")
+        params = lm.init(cfg, jax.random.key(0))
+        tcfg = train_lib.TrainConfig(opt=opt.OptConfig(name="sgd", lr=0.1,
+                                                       grad_clip=0.0))
+        rng = np.random.default_rng(0)
+        batch = {"inputs": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (4, 16)).astype(np.int32)),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (4, 16)).astype(np.int32))}
+        s0 = train_lib.jit_train_step(cfg, tcfg, None, donate=False)
+        o = opt.opt_init(params, tcfg.opt)
+        p_ref, _, m_ref = s0(params, o, batch, jnp.int32(0))
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        s1 = train_lib.jit_train_step(cfg, tcfg, mesh, donate=False)
+        with mesh:
+            p_sh, _, m_sh = s1(params, o, batch, jnp.int32(0))
+        assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-2
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-3)
+        print("LM_SHARD_OK")
+    """)
+    assert "LM_SHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_remesh_across_mesh_shapes():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.runtime.elastic import remesh, shrink_data_axis, \
+            rebalance_batch
+        m1 = make_mesh((4, 2), ("data", "model"))
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        sh1 = {"w": NamedSharding(m1, P("data", "model"))}
+        placed = remesh(tree, sh1)
+        m2 = shrink_data_axis(m1, lost=2)
+        assert dict(m2.shape) == {"data": 2, "model": 2}
+        sh2 = {"w": NamedSharding(m2, P("data", "model"))}
+        moved = remesh(placed, sh2)
+        np.testing.assert_allclose(np.asarray(moved["w"]),
+                                   np.asarray(tree["w"]))
+        assert rebalance_batch(37, m2) == 36
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cell_compiles():
+    """The dry-run plumbing end-to-end on a reduced mesh + smoke config."""
+    out = run_sub("""
+        import jax, json
+        import dataclasses
+        from repro.configs import smoke_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch import dryrun as DR
+        from repro.models.config import ShapeCell
+        mesh = make_mesh((2, 2), ("data", "model"))
+        for arch in ("gemma-7b", "mamba2-370m", "phi3.5-moe-42b-a6.6b"):
+            cfg = smoke_config(arch)
+            cell = ShapeCell("t", 64, 8, "train")
+            lowered = DR.lower_train_cell(cfg, cell, mesh)
+            rec = DR.compile_and_analyze(lowered, 4)
+            assert rec["flops"] > 0
+            cell_d = ShapeCell("d", 64, 8, "decode")
+            lowered = DR.lower_decode_cell(cfg, cell_d, mesh)
+            rec = DR.compile_and_analyze(lowered, 4)
+            assert rec["flops"] > 0
+        print("DRYRUN_OK")
+    """, devices=4)
+    assert "DRYRUN_OK" in out
+
+
+def test_collective_parser_on_synthetic_hlo():
+    from repro.roofline.analysis import parse_collectives, shape_bytes
+    hlo = '''
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[64,128]{1,0} all-reduce(f32[64,128]{1,0} %ag), to_apply=%add
+  %rs = f32[16,128]{1,0} reduce-scatter(f32[64,128]{1,0} %ar), dimensions={0}
+  %cp = f32[16,128]{1,0} collective-permute(f32[16,128]{1,0} %rs)
+'''
+    st = parse_collectives(hlo)
+    assert st.count_by_op == {"all-gather": 1, "all-reduce": 1,
+                              "reduce-scatter": 1, "collective-permute": 1}
+    assert st.bytes_by_op["all-gather"] == 16 * 128 * 4
+    assert st.bytes_by_op["all-reduce"] == 64 * 128 * 4
+    assert shape_bytes("(bf16[8,2]{1,0}, f32[4]{0})") == 8 * 2 * 2 + 16
+
+
+def test_roofline_terms_math():
+    from repro.roofline.analysis import RooflineTerms, extrapolate
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                      collective_bytes=50e9 * 256 * 2, chips=256,
+                      model_flops=197e12 * 128)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.t_collective == pytest.approx(2.0)
+    assert t.bottleneck == "collective"
+    assert t.useful_fraction == pytest.approx(0.5)
+    assert extrapolate(10.0, 14.0, 1, 2, 10) == pytest.approx(46.0)

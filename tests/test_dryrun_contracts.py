@@ -1,0 +1,135 @@
+"""Dry-run contracts that must hold WITHOUT touching jax device state:
+abstract trees mirror concrete trees; cache pspecs match cache structure;
+legality rules; report rendering."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.models import lm
+from repro.models.config import LM_SHAPES
+
+
+def test_abstract_params_mirror_init():
+    for arch in ("gemma-7b", "mamba2-370m", "zamba2-1.2b",
+                 "llama-3.2-vision-11b", "grok-1-314b"):
+        cfg = smoke_config(arch)
+        real = lm.init(cfg, jax.random.key(0))
+        abst = lm.abstract(cfg)
+        rf, rd = jax.tree.flatten(real)
+        af, ad = jax.tree.flatten(abst)
+        assert rd == ad, arch
+        for r, a in zip(rf, af):
+            assert r.shape == a.shape and r.dtype == a.dtype, arch
+
+
+def test_abstract_cache_mirrors_init_cache():
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for arch in ("gemma-7b", "mamba2-370m", "zamba2-1.2b",
+                 "llama-3.2-vision-11b", "h2o-danube-3-4b"):
+        cfg = smoke_config(arch)
+        real = lm.init_cache(cfg, 2, 64)
+        abst = lm.abstract_cache(cfg, 2, 64, mesh)
+        rf, rd = jax.tree.flatten(real)
+        af, ad = jax.tree.flatten(abst)
+        assert rd == ad, arch
+        for r, a in zip(rf, af):
+            assert r.shape == a.shape and r.dtype == a.dtype, arch
+            assert a.sharding is not None, arch
+
+
+def test_full_config_param_counts():
+    """Analytic parameter counts in the published ballpark."""
+    expect = {"gemma-7b": (7e9, 10e9),       # 8.5B with 256k embed
+              "llama3-405b": (390e9, 420e9),
+              "granite-34b": (30e9, 38e9),
+              "mamba2-370m": (330e6, 420e6),
+              "grok-1-314b": (290e9, 330e9),
+              "zamba2-1.2b": (0.9e9, 1.5e9),
+              "h2o-danube-3-4b": (3e9, 5e9),
+              "llama-3.2-vision-11b": (9e9, 13e9),
+              "musicgen-medium": (1e9, 2.2e9),
+              "phi3.5-moe-42b-a6.6b": (39e9, 45e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, n / 1e9)
+
+
+def test_moe_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    a = cfg.active_params()
+    assert 5e9 <= a <= 8e9, a / 1e9            # ~6.6B active
+    assert a < cfg.n_params()
+
+
+def test_input_specs_shapes():
+    from repro.training.train_lib import input_specs
+    cfg = get_config("gemma-7b")
+    s = input_specs(cfg, seq_len=4096, global_batch=256, kind="train")
+    assert s["inputs"].shape == (256, 4096)
+    assert s["labels"].dtype == jnp.int32
+    v = input_specs(get_config("llama-3.2-vision-11b"), seq_len=128,
+                    global_batch=4, kind="train")
+    assert v["image_embeds"].shape == (4, 1600, 4096)
+    a = input_specs(get_config("musicgen-medium"), seq_len=128,
+                    global_batch=4, kind="train")
+    assert a["inputs"].shape == (4, 128, 1536)        # stub embeddings
+    d = input_specs(cfg, seq_len=32768, global_batch=128, kind="decode")
+    assert d["token"].shape == (128,)
+
+
+def test_gbdt_input_specs_shapes():
+    from repro.core import distributed as GD
+    from repro.configs import get_gbdt_config
+    from repro.launch.mesh import make_mesh
+    cfg, n, m = get_gbdt_config()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    specs = GD.gbdt_input_specs(n, m, cfg.n_outputs, mesh, cfg)
+    assert specs["F"].shape == (n, cfg.n_outputs)
+    assert specs["codes"].dtype == jnp.uint8
+    assert specs["Y"].shape == (n,)
+
+
+def test_shape_cells_match_assignment():
+    cells = {c.name: c for c in LM_SHAPES}
+    assert cells["train_4k"].seq_len == 4096
+    assert cells["train_4k"].global_batch == 256
+    assert cells["prefill_32k"].seq_len == 32768
+    assert cells["prefill_32k"].global_batch == 32
+    assert cells["decode_32k"].global_batch == 128
+    assert cells["decode_32k"].kind == "decode"
+    assert cells["long_500k"].seq_len == 524288
+    assert cells["long_500k"].global_batch == 1
+    assert cells["long_500k"].kind == "decode"
+
+
+def test_report_rendering():
+    from repro.roofline.report import dryrun_table, roofline_table
+    recs = [{"arch": "a", "shape": "s", "status": "ok",
+             "full": {"compile_s": 1.0,
+                      "memory": {"temp_bytes": 2e9, "argument_bytes": 1e9},
+                      "collectives": {"count": {"all-reduce": 3}}},
+             "roofline": {"t_compute_s": 0.1, "t_memory_s": 0.2,
+                          "t_collective_s": 0.05, "bottleneck": "memory",
+                          "useful_fraction": 0.8,
+                          "roofline_fraction": 0.4}},
+            {"arch": "b", "shape": "long_500k",
+             "status": "skip: long_500k needs sub-quadratic attention"}]
+    d = dryrun_table(recs)
+    assert "| a | s | ok | 1.0 | 2.0GB | 1.0GB | redu:3 |" in d
+    r = roofline_table(recs)
+    assert "memory" in r and "0.80" in r
+
+
+def test_remat_policy_variants_lower():
+    cfg = dataclasses.replace(smoke_config("gemma-7b"), remat_policy="dots")
+    params = lm.init(cfg, jax.random.key(0))
+    batch = {"inputs": jnp.ones((1, 16), jnp.int32),
+             "labels": jnp.ones((1, 16), jnp.int32)}
+    loss = jax.jit(lambda p: lm.lm_loss(p, cfg, batch)[0])(params)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# Histogram kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,nodes,B,c", [
+    (64, 3, 1, 8, 2),
+    (256, 8, 4, 16, 4),
+    (300, 5, 8, 16, 6),      # non-multiple row count (padding path)
+    (128, 2, 2, 256, 1),     # full 256-bin histograms
+])
+def test_histogram_kernel_matches_ref(n, m, nodes, B, c):
+    k1, k2, k3 = jax.random.split(jax.random.key(n + m), 3)
+    codes = jax.random.randint(k1, (n, m), 0, B, jnp.int32)
+    node = jax.random.randint(k2, (n,), 0, nodes, jnp.int32)
+    stats = jax.random.normal(k3, (n, c), jnp.float32)
+    h_ref = ref.histogram_ref(codes, node, stats, n_nodes=nodes, n_bins=B)
+    h_ker = ops.histogram(codes, node, stats, n_nodes=nodes, n_bins=B,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(h_ker), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_histogram_kernel_dtypes(dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    codes = jax.random.randint(k1, (128, 4), 0, 16, jnp.int32)
+    node = jax.random.randint(k2, (128,), 0, 2, jnp.int32)
+    stats = jax.random.normal(k3, (128, 3), jnp.float32).astype(dtype)
+    h_ref = ref.histogram_ref(codes, node, stats.astype(jnp.float32),
+                              n_nodes=2, n_bins=16)
+    h_ker = ops.histogram(codes, node, stats.astype(jnp.float32),
+                          n_nodes=2, n_bins=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(h_ker), np.asarray(h_ref),
+                               rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,dh,causal,window", [
+    (1, 2, 2, 64, 32, True, None),
+    (2, 4, 2, 128, 32, True, None),       # GQA 2:1
+    (1, 8, 1, 96, 64, True, None),        # MQA, ragged seq
+    (2, 4, 4, 128, 32, False, None),      # bidirectional
+    (1, 4, 2, 256, 32, True, 64),         # sliding window
+])
+def test_flash_attention_matches_ref(b, hq, hkv, s, dh, causal, window):
+    ks = jax.random.split(jax.random.key(s + hq), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, dh), jnp.float32)
+    o_ref = ref.mha_ref(q, k, v, causal=causal, window=window)
+    o_ker = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 32), jnp.bfloat16)
+    o_ref = ref.mha_ref(q, k, v, causal=True)
+    o_ker = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o_ker, np.float32), np.asarray(o_ref, np.float32),
+        rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,dh,window", [
+    (2, 4, 2, 128, 32, None),
+    (1, 8, 8, 512, 64, None),
+    (3, 4, 1, 200, 32, None),            # MQA + ragged cache
+    (2, 4, 2, 256, 32, 64),              # sliding window
+])
+def test_decode_attention_matches_ref(b, hq, hkv, s, dh, window):
+    ks = jax.random.split(jax.random.key(b * s), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, dh), jnp.float32)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1, jnp.int32)
+    o_ref = ref.decode_attention_ref(q, k, v, lengths, window=window)
+    o_ker = ops.decode_attention(q, k, v, lengths, window=window,
+                                 block_s=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Model-layer attention path consistency (jnp chunked vs kernels)
+# ---------------------------------------------------------------------------
+
+def test_chunked_attention_matches_kernel_semantics():
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(jax.random.key(9), 3)
+    b, s, hq, hkv, dh = 2, 96, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, chunk=32)
+    o_ref = ref.mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(o_ref.transpose(0, 2, 1, 3)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_window_matches_ref():
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(jax.random.key(11), 3)
+    b, s, h, dh, w = 1, 128, 2, 32, 48
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, dh), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=w, chunk=32)
+    o_ref = ref.mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(o_ref.transpose(0, 2, 1, 3)),
+                               rtol=2e-3, atol=2e-3)

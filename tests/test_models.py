@@ -1,0 +1,306 @@
+"""Model zoo: per-arch smoke tests + train/decode parity invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.models import lm
+from repro.models.config import LM_SHAPES
+from repro.training import optimizer as opt
+from repro.training import train_lib
+
+
+def _batch_for(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"labels": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32))}
+    if cfg.embed_inputs:
+        batch["inputs"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)).astype(np.float32)
+        ).astype(jnp.bfloat16)
+    else:
+        batch["inputs"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_image_tokens, cfg.d_model))
+            .astype(np.float32)).astype(jnp.bfloat16)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Per-arch smoke: one train step, finite loss, correct shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    params = lm.init(cfg, jax.random.key(0))
+    tcfg = train_lib.TrainConfig()
+    step = train_lib.jit_train_step(cfg, tcfg, None, donate=False)
+    ostate = opt.opt_init(params, tcfg.opt)
+    batch = _batch_for(cfg)
+    # step 50: inside warmup ramp (step 0 has lr == 0 by schedule)
+    p2, o2, m = step(params, ostate, batch, jnp.int32(50))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    # Params actually changed.
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(p2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_shapes_no_nan(arch):
+    cfg = smoke_config(arch)
+    params = lm.init(cfg, jax.random.key(1))
+    batch = _batch_for(cfg, b=2, s=16)
+    logits = jax.jit(lambda p, b: lm.forward(p, cfg, b))(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    params = lm.init(cfg, jax.random.key(2))
+    b = 2
+    cache = lm.init_cache(cfg, b, 64)
+    tok = (jnp.ones((b, cfg.d_model), jnp.bfloat16) if cfg.embed_inputs
+           else jnp.ones((b,), jnp.int32))
+    if cfg.family == "vlm":
+        # image KV must be prefilled in production; zeros suffice for smoke
+        pass
+    logits, cache2 = jax.jit(
+        lambda p, c, t: lm.decode_step(p, cfg, c, t))(params, cache, tok)
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache length advanced
+    lens = jax.tree.leaves({k: v for k, v in cache2.items()
+                            if k == "layers"})
+    flat = jax.tree.flatten(cache2["layers"])[0]
+    # any 'length' leaf advanced by 1: check via structure match
+    def lengths(c):
+        out = []
+        def walk(x):
+            if isinstance(x, dict):
+                for k, v in x.items():
+                    if k == "length":
+                        out.append(np.asarray(v))
+                    else:
+                        walk(v)
+            elif isinstance(x, (list, tuple)):
+                for v in x:
+                    walk(v)
+        walk(c)
+        return out
+    l_old = lengths(cache)
+    l_new = lengths(cache2)
+    for a, b_ in zip(l_old, l_new):
+        np.testing.assert_array_equal(b_, a + 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode/forward parity: step-by-step decode must reproduce teacher-forced
+# forward logits (the strongest cache-correctness invariant).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "h2o-danube-3-4b", "mamba2-370m",
+                                  "zamba2-1.2b", "phi3.5-moe-42b-a6.6b",
+                                  "granite-34b"])
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(arch)
+    # MoE capacity effects differ between batched prefill and decode; widen.
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = lm.init(cfg, jax.random.key(3))
+    b, s = 2, 12
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32))
+    batch = {"inputs": toks, "labels": toks}
+    full = np.asarray(jax.jit(lambda p: lm.forward(p, cfg, batch))(params),
+                      np.float32)
+
+    cache = lm.init_cache(cfg, b, 32)
+    step = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+    outs = []
+    for t in range(s):
+        logits, cache = step(params, cache, toks[:, t])
+        outs.append(np.asarray(logits, np.float32))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=5e-2, atol=5e-2)
+
+
+def test_vlm_cross_attention_gates_closed_at_init():
+    """zero-init tanh gate => cross-attn contributes nothing at init, so a
+    text-only forward equals the vlm forward with random image embeds."""
+    cfg = smoke_config("llama-3.2-vision-11b")
+    params = lm.init(cfg, jax.random.key(4))
+    b, s = 2, 8
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32))
+    img1 = jnp.asarray(rng.normal(size=(b, cfg.n_image_tokens, cfg.d_model))
+                       .astype(np.float32)).astype(jnp.bfloat16)
+    img2 = img1 * 3.0 + 1.0
+    f = jax.jit(lambda p, im: lm.forward(
+        p, cfg, {"inputs": toks, "image_embeds": im}))
+    np.testing.assert_allclose(np.asarray(f(params, img1), np.float32),
+                               np.asarray(f(params, img2), np.float32),
+                               atol=1e-4)
+
+
+def test_sliding_window_limits_context():
+    """h2o-danube: token far beyond the window must not see early context.
+    One layer only — with L layers the receptive field is L*window."""
+    cfg = dataclasses.replace(smoke_config("h2o-danube-3-4b"), window=8,
+                              n_layers=1)
+    params = lm.init(cfg, jax.random.key(5))
+    rng = np.random.default_rng(5)
+    s = 24
+    t1 = rng.integers(0, cfg.vocab_size, (1, s)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, :4] = (t2[0, :4] + 7) % cfg.vocab_size     # differ outside window
+    f = jax.jit(lambda p, t: lm.forward(p, cfg, {"inputs": jnp.asarray(t),
+                                                 "labels": jnp.asarray(t)}))
+    o1 = np.asarray(f(params, t1), np.float32)
+    o2 = np.asarray(f(params, t2), np.float32)
+    # Last position attends only to the trailing `window` tokens.
+    np.testing.assert_allclose(o1[0, -1], o2[0, -1], rtol=1e-3, atol=1e-3)
+    assert not np.allclose(o1[0, 2], o2[0, 2], atol=1e-3)  # early pos differ
+
+
+def test_ssd_chunked_matches_reference_recurrence():
+    from repro.models import ssm as S
+    rng = np.random.default_rng(6)
+    b, s, h, p, n = 2, 32, 4, 8, 16
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, h))).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.normal(size=(h,))).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    y_ref, h_ref = S.ssd_reference(x, dt, A, Bm, Cm)
+    y, h_last = S._ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_scan_vs_unrolled_forward_equal():
+    cfg = smoke_config("gemma-7b")
+    params = lm.init(cfg, jax.random.key(7))
+    batch = _batch_for(cfg, b=1, s=8)
+    a = jax.jit(lambda p: lm.forward(p, cfg, batch))(params)
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    b_ = jax.jit(lambda p: lm.forward(p, cfg_u, batch))(params)
+    # bf16 forward: scan/unrolled schedules round differently -> L2 criterion
+    x, y = np.asarray(a, np.float32), np.asarray(b_, np.float32)
+    rel = np.linalg.norm(x - y) / np.linalg.norm(y)
+    assert rel < 0.02, rel
+
+
+def test_microbatch_scan_matches_single_pass():
+    """grad accumulation over microbatches == one full-batch step."""
+    cfg = smoke_config("gemma-7b")
+    params = lm.init(cfg, jax.random.key(8))
+    tcfg = train_lib.TrainConfig(opt=opt.OptConfig(name="sgd", lr=0.1,
+                                                   grad_clip=0.0,
+                                                   warmup_steps=1))
+    batch = _batch_for(cfg, b=4, s=16)
+    s1 = train_lib.jit_train_step(cfg, tcfg, None, donate=False)
+    cfg2 = dataclasses.replace(cfg, microbatches=2)
+    s2 = train_lib.jit_train_step(cfg2, tcfg, None, donate=False)
+    o = opt.opt_init(params, tcfg.opt)
+    p1, _, m1 = s1(params, o, batch, jnp.int32(0))
+    p2, _, m2 = s2(params, o, batch, jnp.int32(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-2)
+    for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_full_configs_match_assignment():
+    """The published numbers from the assignment table, verbatim."""
+    spec = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mamba2-370m": (48, 1024, None, None, 0, 50280),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d
+        assert cfg.d_ff == ff and cfg.vocab_size == v
+        if h is not None:
+            assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("grok-1-314b").n_experts == 8
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("gemma-7b").head_dim == 256
+
+
+def test_subquadratic_flags():
+    assert get_config("mamba2-370m").is_subquadratic
+    assert get_config("zamba2-1.2b").is_subquadratic
+    assert get_config("h2o-danube-3-4b").is_subquadratic
+    for a in ("gemma-7b", "llama3-405b", "granite-34b", "grok-1-314b",
+              "phi3.5-moe-42b-a6.6b", "llama-3.2-vision-11b",
+              "musicgen-medium"):
+        assert not get_config(a).is_subquadratic, a
+
+
+def test_n_params_analytic_close_to_actual():
+    for arch in ("gemma-7b", "mamba2-370m", "granite-34b"):
+        cfg = smoke_config(arch)
+        params = lm.init(cfg, jax.random.key(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.n_params()
+        assert abs(actual - analytic) / actual < 0.1, (arch, actual, analytic)
+
+
+def test_moe_gather_dispatch_matches_einsum():
+    """The §Perf gather dispatch must be numerically equivalent to the
+    GShard einsum dispatch (same slot assignment, same capacity drops)."""
+    from repro.models import moe as Moe
+    from repro.models.params import init_params
+    rng = np.random.default_rng(0)
+    d, f, E, k = 32, 64, 8, 2
+    decls = Moe.moe_decls(d, f, E, "swiglu")
+    p = init_params(decls, jax.random.key(0), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 48, d)).astype(np.float32))
+    kw = dict(n_experts=E, top_k=k, act="swiglu", capacity_factor=1.5,
+              router_group=16)
+    y1 = Moe.moe_apply(p, x, dispatch_mode="einsum", **kw)
+    y2 = Moe.moe_apply(p, x, dispatch_mode="gather", **kw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_gather_dispatch_grad_finite():
+    from repro.models import moe as Moe
+    from repro.models.params import init_params
+    decls = Moe.moe_decls(16, 32, 4, "swiglu")
+    p = init_params(decls, jax.random.key(1), jnp.float32)
+    x = jnp.ones((1, 8, 16), jnp.float32) * 0.1
+
+    def loss(p_):
+        y = Moe.moe_apply(p_, x, n_experts=4, top_k=2, act="swiglu",
+                          capacity_factor=2.0, router_group=8,
+                          dispatch_mode="gather")
+        return jnp.sum(jnp.square(y))
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
