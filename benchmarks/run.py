@@ -125,6 +125,79 @@ def bench_rounds(scale) -> List[Dict]:
     return rows
 
 
+GBDT_QUICK = dict(n=4000, m=20, d=6, trees=40, depth=5, bins=64)
+GBDT_FULL = dict(n=40000, m=60, d=16, trees=200, depth=6, bins=256)
+
+
+def bench_gbdt(scale) -> List[Dict]:
+    """Compiled-loop trajectory: rounds/sec and end-to-end fit time over
+    {sketch_k in {2, 5, full}} x {single_tree, one_vs_all} x {scan, python}.
+
+    This is the repo's standing perf baseline: every PR can diff
+    `BENCH_gbdt.json` (written to the repo root) to see whether the hot path
+    moved.  `rounds_per_sec` counts boosting rounds (one multivariate tree —
+    or d univariate trees for one_vs_all — per round); `trajectory` samples
+    the cumulative train time every 10 rounds from the fit history.
+    """
+    import jax
+    from repro.core.boosting import GBDTConfig, SketchBoost
+    from repro.core.histogram import resolve_kernel_mode
+    from repro.data.pipeline import make_tabular, train_test_split
+
+    sc = GBDT_FULL if scale is FULL else GBDT_QUICK
+    X, y = make_tabular("multiclass", sc["n"], sc["m"], sc["d"], seed=0)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, seed=0)
+
+    rows: List[Dict] = []
+    for strategy in ("single_tree", "one_vs_all"):
+        for k_label, method, k in ((2, "random_projection", 2),
+                                   (5, "random_projection", 5),
+                                   ("full", "none", 0)):
+            for loop in ("scan", "python"):
+                cfg = GBDTConfig(loss="multiclass", strategy=strategy,
+                                 sketch_method=method, sketch_k=k,
+                                 n_trees=sc["trees"], depth=sc["depth"],
+                                 n_bins=sc["bins"], learning_rate=0.1,
+                                 loop=loop, seed=0)
+                t0 = time.perf_counter()
+                SketchBoost(cfg).fit(Xtr, ytr)       # cold: includes tracing
+                cold = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                model = SketchBoost(cfg).fit(Xtr, ytr)   # warm: jit cache hit
+                jax.block_until_ready(model.forest.value)
+                dt = time.perf_counter() - t0
+                traj = [round(r["train_time_s"], 3)
+                        for r in model.history if r["round"] % 10 == 0]
+                rows.append({
+                    "strategy": strategy, "sketch_k": k_label,
+                    "method": method, "loop": loop,
+                    "rounds": int(model.forest.n_trees),
+                    "cold_fit_time_s": round(cold, 3),
+                    "fit_time_s": round(dt, 3),
+                    "rounds_per_sec": round(model.forest.n_trees / dt, 3),
+                    "test_loss": round(model.eval_loss(Xte, yte), 5),
+                    "trajectory_s": traj,
+                })
+                print(f"  gbdt {strategy} k={k_label} {loop}: "
+                      f"{rows[-1]['rounds_per_sec']} rounds/s "
+                      f"({rows[-1]['fit_time_s']}s)", flush=True)
+
+    payload = {
+        "bench": "gbdt_compiled_loop",
+        "backend": jax.default_backend(),
+        "kernel_mode": resolve_kernel_mode(True),
+        "scale": sc,
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_gbdt.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:gbdt] wrote {os.path.join(root, 'BENCH_gbdt.json')}",
+          flush=True)
+    return rows
+
+
 def bench_kernels() -> List[Dict]:
     """Pallas (interpret) vs jnp oracle — correctness + structural cost.
     Wall-clock on CPU interpret mode is NOT the TPU number; report analytic
@@ -195,6 +268,7 @@ def bench_compression() -> List[Dict]:
 
 
 BENCHES = {
+    "gbdt": lambda sc: bench_gbdt(sc),
     "table1": lambda sc: bench_table1(sc),
     "fig1": lambda sc: bench_fig1(sc),
     "fig3": lambda sc: bench_fig3(sc),
@@ -226,7 +300,7 @@ def main() -> None:
             json.dump(rows, f, indent=1, default=float)
         # CSV summary
         if rows and isinstance(rows[0], dict):
-            keys = [k for k in rows[0] if k != "curve"]
+            keys = [k for k in rows[0] if k not in ("curve", "trajectory_s")]
             print(",".join(keys))
             for r in rows:
                 print(",".join(str(r.get(k, "")) for k in keys))

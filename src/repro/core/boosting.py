@@ -11,6 +11,18 @@ Row-sampling accelerators from the Related-Work section are available as options
 uniform Stochastic Gradient Boosting (``subsample``) and GOSS (``goss_a/goss_b``),
 both expressed as per-sample weights on the count channel so they compose with the
 sketch.  Column sampling masks features during the split search.
+
+Training loop
+-------------
+The default loop (``cfg.loop == "scan"``) compiles the *entire* boosting round
+sequence as ``jax.lax.scan`` segments of ``cfg.scan_chunk`` rounds: one trace of
+``_boost_round`` total, one device dispatch per segment, trees stacked into
+pre-allocated ``(chunk, ...)`` forest buffers by the scan itself.  Validation
+loss is computed on-device every round; the host only syncs at segment
+boundaries to fold the loss trajectory into early-stopping decisions (the
+"host callback boundary").  ``cfg.loop == "python"`` keeps the one-dispatch-
+per-round reference loop — bit-identical forests under a fixed seed, used by
+the parity tests and as a debugging fallback.  See docs/performance.md.
 """
 from __future__ import annotations
 
@@ -23,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import histogram as H
 from repro.core import losses as L
 from repro.core import quantize as Q
 from repro.core import sketch as SK
@@ -50,11 +63,19 @@ class GBDTConfig:
     colsample: float = 1.0               # per-tree feature sampling rate
     early_stopping_rounds: int = 0       # 0 = off
     eval_every: int = 1
-    use_kernel: bool = False             # Pallas histogram kernel (interpret on CPU)
+    use_kernel: Any = True               # True=auto: Pallas on TPU, jnp off-TPU;
+                                         # or explicit "jnp"/"pallas"/"interpret"
+    loop: str = "scan"                   # "scan" (compiled rounds) | "python"
+    scan_chunk: int = 32                 # rounds per scan segment (host boundary)
     seed: int = 0
 
     def resolve(self, d: int) -> "GBDTConfig":
-        return dataclasses.replace(self, n_outputs=d)
+        """Bind the output dimension and pin the kernel mode for this process
+        (backend auto-detection must happen outside jit traces so the resolved
+        mode is part of every static cache key)."""
+        return dataclasses.replace(
+            self, n_outputs=d,
+            use_kernel=H.resolve_kernel_mode(self.use_kernel))
 
 
 def _sample_weights(key: jax.Array, G: jax.Array, cfg: GBDTConfig) -> jax.Array:
@@ -83,10 +104,13 @@ def _feature_mask(key: jax.Array, m: int, cfg: GBDTConfig) -> Optional[jax.Array
     return jax.random.uniform(key, (m,)) < cfg.colsample
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def boost_step(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
-               cfg: GBDTConfig) -> Tuple[jax.Array, T.Tree]:
-    """One boosting round: gradients -> sketch -> tree -> leaf values -> update F."""
+def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
+                 cfg: GBDTConfig) -> Tuple[jax.Array, T.Tree]:
+    """One boosting round: gradients -> sketch -> tree -> leaf values -> update F.
+
+    Pure traceable body shared by `boost_step` (per-round jit dispatch) and
+    `boost_scan` (whole-segment jit).
+    """
     loss = L.get_loss(cfg.loss)
     G, Hd = loss.grad_hess(F, Y)
     k_key, s_key, c_key = jax.random.split(key, 3)
@@ -130,6 +154,65 @@ def boost_step(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     # Fold the per-output axis into a Tree whose value tensor is (d, 2^D, 1);
     # stored as-is — predict path re-vmaps (see SketchBoost.predict_raw).
     return F, trees
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def boost_step(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
+               cfg: GBDTConfig) -> Tuple[jax.Array, T.Tree]:
+    """Single-round entry point (one dispatch per tree; the reference loop)."""
+    return _boost_round(F, codes, Y, key, cfg)
+
+
+def _apply_tree(tree: T.Tree, codes: jax.Array, F: jax.Array,
+                cfg: GBDTConfig) -> jax.Array:
+    """Add one round's contribution to the raw scores F for new data."""
+    if cfg.strategy == "single_tree":
+        pos = T.tree_leaf_index(tree.feat, tree.thr, codes, depth=cfg.depth)
+        return F + cfg.learning_rate * tree.value[pos]
+
+    def apply_one(f, t, v):
+        pos = T.tree_leaf_index(f, t, codes, depth=cfg.depth)
+        return v[pos, 0]
+
+    delta = jax.vmap(apply_one)(tree.feat, tree.thr, tree.value)
+    return F + cfg.learning_rate * delta.T
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_steps", "has_eval"),
+                   donate_argnums=(0, 3))
+def boost_scan(F: jax.Array, codes: jax.Array, Y: jax.Array,
+               Fv: jax.Array, codes_v: jax.Array, Yv: jax.Array,
+               key: jax.Array, *, cfg: GBDTConfig, n_steps: int,
+               has_eval: bool):
+    """``n_steps`` boosting rounds as one compiled ``jax.lax.scan``.
+
+    The scan stacks every round's tree into pre-allocated ``(n_steps, ...)``
+    forest buffers and — when an eval set is present — advances the validation
+    scores ``Fv`` and records the validation loss *every* round, so the host
+    can replay early stopping exactly from the returned trajectory without
+    any per-round dispatch.
+
+    Returns ``(F, Fv, key, trees, vloss)`` where ``trees`` is a `tree.Tree`
+    whose arrays carry a leading ``n_steps`` axis and ``vloss`` is
+    ``(n_steps,)`` float32 (zeros when ``has_eval`` is False).
+    """
+    loss = L.get_loss(cfg.loss)
+
+    def step(carry, _):
+        F, Fv, key = carry
+        key, sub = jax.random.split(key)
+        F, tree = _boost_round(F, codes, Y, sub, cfg)
+        if has_eval:
+            Fv = _apply_tree(tree, codes_v, Fv, cfg)
+            vloss = loss.value(Fv, Yv).astype(jnp.float32)
+        else:
+            vloss = jnp.float32(0.0)
+        return (F, Fv, key), (tree, vloss)
+
+    (F, Fv, key), (trees, vloss) = jax.lax.scan(step, (F, Fv, key), None,
+                                                length=n_steps)
+    return F, Fv, key, trees, vloss
 
 
 class SketchBoost:
@@ -183,7 +266,6 @@ class SketchBoost:
             verbose: bool = False) -> "SketchBoost":
         d = self._infer_d(y)
         cfg = self.cfg.resolve(d)
-        loss = L.get_loss(cfg.loss)
         X = np.asarray(X, np.float32)
         self.quantizer = Q.fit_quantizer(X, cfg.n_bins, seed=cfg.seed)
         codes = self._bin(X)
@@ -192,21 +274,103 @@ class SketchBoost:
 
         n = codes.shape[0]
         F = jnp.broadcast_to(self.base_score, (n, d)).astype(jnp.float32)
-        if eval_set is not None:
+        has_eval = eval_set is not None
+        if has_eval:
             codes_v = self._bin(np.asarray(eval_set[0], np.float32))
             Yv = self._targets(eval_set[1], d)
             Fv = jnp.broadcast_to(self.base_score,
                                   (codes_v.shape[0], d)).astype(jnp.float32)
+        else:
+            # Static-branch dummies: never touched when has_eval is False.
+            codes_v, Yv, Fv = codes[:1], Y[:1], F[:1]
 
         key = jax.random.key(cfg.seed)
+        if cfg.loop == "python":
+            self._fit_python(cfg, F, codes, Y, Fv, codes_v, Yv, has_eval, key,
+                             verbose)
+        elif cfg.loop == "scan":
+            self._fit_scan(cfg, F, codes, Y, Fv, codes_v, Yv, has_eval, key,
+                           verbose)
+        else:
+            raise ValueError(f"unknown loop {cfg.loop!r}; "
+                             "expected 'scan' or 'python'")
+        self.cfg = cfg
+        return self
+
+    def _fit_scan(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
+                  has_eval: bool, key, verbose: bool) -> None:
+        """Compiled loop: scan segments of `scan_chunk` rounds, host-side
+        early-stopping replay between segments (see module docstring)."""
+        n_total = cfg.n_trees
+        chunk = cfg.scan_chunk if cfg.scan_chunk > 0 else n_total
+        chunk = max(1, min(chunk, n_total))
+        best_loss, best_round = np.inf, -1
+        feat_c, thr_c, val_c = [], [], []
+        done, stop = 0, False
+        t0 = time.perf_counter()
+        seg_start = 0.0
+        while done < n_total and not stop:
+            steps = min(chunk, n_total - done)
+            F, Fv, key, trees, vloss = boost_scan(
+                F, codes, Y, Fv, codes_v, Yv, key, cfg=cfg, n_steps=steps,
+                has_eval=has_eval)
+            vl = np.asarray(vloss)            # host sync = segment boundary
+            elapsed = time.perf_counter() - t0
+            keep = steps
+            for j in range(steps):
+                it = done + j
+                # Per-round timestamps are linearly interpolated within the
+                # segment (the device is not interrupted to timestamp trees).
+                t_j = seg_start + (elapsed - seg_start) * (j + 1) / steps
+                rec = {"round": it, "train_time_s": t_j}
+                if has_eval and it % cfg.eval_every == 0:
+                    v = float(vl[j])
+                    rec["valid_loss"] = v
+                    if v < best_loss - 1e-9:
+                        best_loss, best_round = v, it
+                    if (cfg.early_stopping_rounds
+                            and it - best_round >= cfg.early_stopping_rounds):
+                        self.history.append(rec)
+                        keep, stop = j + 1, True
+                        if verbose:
+                            print(f"[sketchboost] early stop @ {it} "
+                                  f"(best {best_loss:.5f} @ {best_round})")
+                        break
+                self.history.append(rec)
+            feat_c.append(trees.feat[:keep])
+            thr_c.append(trees.thr[:keep])
+            val_c.append(trees.value[:keep])
+            done += keep
+            seg_start = elapsed
+            if verbose and not stop:
+                msg = f"[sketchboost] round {done - 1}"
+                if has_eval:
+                    msg += f" valid_loss={float(vl[keep - 1]):.5f}"
+                print(msg)
+
+        feat = jnp.concatenate(feat_c, axis=0)
+        thr = jnp.concatenate(thr_c, axis=0)
+        value = jnp.concatenate(val_c, axis=0)
+        if best_round >= 0 and cfg.early_stopping_rounds:
+            feat, thr, value = (feat[:best_round + 1], thr[:best_round + 1],
+                                value[:best_round + 1])
+        self.best_round = best_round if best_round >= 0 else feat.shape[0] - 1
+        self.forest = T.Forest(feat=feat, thr=thr, value=value)
+
+    def _fit_python(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
+                    has_eval: bool, key, verbose: bool) -> None:
+        """Reference loop: one `boost_step` dispatch per round.  Kept for
+        scan-parity tests and debugging; trains bit-identical forests."""
+        loss = L.get_loss(cfg.loss)
         trees, best_loss, best_round, t0 = [], jnp.inf, -1, time.perf_counter()
         for it in range(cfg.n_trees):
             key, sub = jax.random.split(key)
             F, tree = boost_step(F, codes, Y, sub, cfg)
             trees.append(tree)
             rec = {"round": it, "train_time_s": time.perf_counter() - t0}
-            if eval_set is not None and it % cfg.eval_every == 0:
-                Fv = self._apply_tree(tree, codes_v, Fv, cfg)
+            if has_eval:
+                Fv = _apply_tree(tree, codes_v, Fv, cfg)
+            if has_eval and it % cfg.eval_every == 0:
                 vloss = float(loss.value(Fv, Yv))
                 rec["valid_loss"] = vloss
                 if vloss < best_loss - 1e-9:
@@ -229,19 +393,6 @@ class SketchBoost:
             trees = trees[:best_round + 1]
         self.best_round = best_round if best_round >= 0 else len(trees) - 1
         self.forest = T.stack_trees(trees)
-        self.cfg = cfg
-        return self
-
-    def _apply_tree(self, tree: T.Tree, codes: jax.Array, F: jax.Array,
-                    cfg: GBDTConfig) -> jax.Array:
-        if cfg.strategy == "single_tree":
-            pos = T.tree_leaf_index(tree.feat, tree.thr, codes, depth=cfg.depth)
-            return F + cfg.learning_rate * tree.value[pos]
-        def apply_one(f, t, v):
-            pos = T.tree_leaf_index(f, t, codes, depth=cfg.depth)
-            return v[pos, 0]
-        delta = jax.vmap(apply_one)(tree.feat, tree.thr, tree.value)
-        return F + cfg.learning_rate * delta.T
 
     # -- inference ----------------------------------------------------------
     def predict_raw(self, X) -> jax.Array:

@@ -9,9 +9,35 @@ segment-sum path otherwise.  Both produce identical ``(nodes, m, bins, c)`` tens
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+
+KERNEL_MODES = ("jnp", "pallas", "interpret")
+
+
+def resolve_kernel_mode(use_kernel) -> str:
+    """Normalize a kernel request into one of ``KERNEL_MODES``.
+
+    ``True`` means *auto*: the compiled Mosaic kernel on TPU, otherwise the
+    jnp reference path (numerically identical, parity-checked by the kernel
+    tests) — Pallas interpret mode is a correctness/debugging tool, far too
+    slow to be a CPU execution engine.  Set ``REPRO_PALLAS_INTERPRET=1`` (or
+    pass ``"interpret"`` explicitly) to force interpret mode off-TPU.
+    """
+    if use_kernel is False:
+        return "jnp"
+    if use_kernel is True:
+        if jax.default_backend() == "tpu":
+            return "pallas"
+        if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+            return "interpret"
+        return "jnp"
+    if use_kernel not in KERNEL_MODES:
+        raise ValueError(f"unknown kernel mode {use_kernel!r}; "
+                         f"expected bool or one of {KERNEL_MODES}")
+    return use_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
@@ -41,15 +67,22 @@ def build_histograms_jnp(codes: jax.Array, node_pos: jax.Array, stats: jax.Array
 
 
 def build_histograms(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
-                     *, n_nodes: int, n_bins: int, use_kernel: bool = False,
-                     interpret: bool = True) -> jax.Array:
-    """Dispatching builder.  ``use_kernel=True`` routes to the Pallas TPU kernel
-    (interpret mode on CPU); default is the jnp path, which XLA fuses well on CPU
-    and which serves as the reference implementation everywhere."""
-    if use_kernel:
+                     *, n_nodes: int, n_bins: int, use_kernel=False,
+                     interpret: bool | None = None) -> jax.Array:
+    """Dispatching builder.  ``use_kernel`` is a bool or a mode string (see
+    `resolve_kernel_mode`): ``"pallas"`` runs the compiled Mosaic kernel (TPU),
+    ``"interpret"`` the Pallas interpreter, ``"jnp"`` the segment-sum path —
+    the reference implementation, which XLA fuses well on CPU."""
+    mode = resolve_kernel_mode(use_kernel)
+    # Legacy explicit override: a True `interpret` with any kernel request
+    # (even one that auto-resolved to the jnp fallback) runs the Pallas
+    # interpreter; `interpret=False` forces the compiled kernel.
+    if interpret is not None and use_kernel not in (False, "jnp"):
+        mode = "interpret" if interpret else "pallas"
+    if mode != "jnp":
         from repro.kernels import ops as kops
         return kops.histogram(codes, node_pos, stats, n_nodes=n_nodes,
-                              n_bins=n_bins, interpret=interpret)
+                              n_bins=n_bins, interpret=(mode == "interpret"))
     return build_histograms_jnp(codes, node_pos, stats, n_nodes=n_nodes,
                                 n_bins=n_bins)
 

@@ -74,6 +74,25 @@ def best_splits(gain: jax.Array, min_gain: jax.Array = jnp.float32(0.0)) -> Spli
     return Splits(feat=feat, thr=thr, gain=gain_out, is_leaf=is_leaf)
 
 
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def splits_from_flat(best_gain: jax.Array, best_idx: jax.Array, *, n_bins: int,
+                     min_gain: jax.Array = jnp.float32(0.0)) -> Splits:
+    """Build `Splits` from per-node flattened arg-max results.
+
+    This is the host-side tail of the Pallas split-scan kernel
+    (`repro.kernels.split_kernel`): the kernel emits per-node
+    ``(best_gain, feature * n_bins + bin)``; leaf demotion (no positive-gain
+    candidate -> pass-through leaf) is shared with `best_splits`.
+    """
+    feat = (best_idx // n_bins).astype(jnp.int32)
+    thr = (best_idx % n_bins).astype(jnp.int32)
+    is_leaf = ~(best_gain > min_gain)
+    feat = jnp.where(is_leaf, 0, feat)
+    thr = jnp.where(is_leaf, n_bins - 1, thr)
+    gain_out = jnp.where(is_leaf, 0.0, best_gain)
+    return Splits(feat=feat, thr=thr, gain=gain_out, is_leaf=is_leaf)
+
+
 def brute_force_best_split(codes, stats, lam: float, min_data: int = 0):
     """O(n * m * B * d) oracle for tests: enumerates every (feature, threshold)
     for a single node and scores it directly from raw statistics.  Returns

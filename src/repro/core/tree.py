@@ -49,7 +49,7 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
               *, depth: int, n_bins: int, lam: float,
               min_data_in_leaf: float = 1.0, min_gain: float = 0.0,
               feature_mask: Optional[jax.Array] = None,
-              use_kernel: bool = False):
+              use_kernel=False):
     """Grow one multivariate tree (single-device path).
 
     Args:
@@ -57,10 +57,15 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
       stats:   (n, k+1) sketched gradient stats + count channel (count channel may
                carry SGB/GOSS sample weights).
       G, H_diag: (n, d) full gradients / diagonal Hessians for the leaf pass.
+      use_kernel: bool or kernel-mode string (see `histogram.resolve_kernel_mode`).
+               Kernel modes run the fused Pallas histogram + split-scan pair per
+               level; the jnp mode builds histograms with segment-sum and scans
+               them with `split.split_scores` / `split.best_splits`.
     Returns:
       (Tree, leaf_pos) where leaf_pos is the (n,) leaf index of each sample.
     """
     n, m = codes.shape
+    mode = H.resolve_kernel_mode(use_kernel)
     lam = jnp.float32(lam)
     min_data = jnp.float32(min_data_in_leaf)
     min_gain_ = jnp.float32(min_gain)
@@ -72,10 +77,19 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
     node_pos = jnp.zeros((n,), jnp.int32)
     for lvl in range(depth):
         n_nodes = 2 ** lvl
-        hist = H.build_histograms(codes, node_pos, stats, n_nodes=n_nodes,
-                                  n_bins=n_bins, use_kernel=use_kernel)
-        gain = S.split_scores(hist, lam, min_data, feature_mask)
-        sp = S.best_splits(gain, min_gain_)
+        if mode != "jnp":
+            from repro.kernels import ops as kops
+            best_gain, best_idx = kops.histogram_splits(
+                codes, node_pos, stats, lam, min_data, feature_mask,
+                n_nodes=n_nodes, n_bins=n_bins,
+                interpret=(mode == "interpret"))
+            sp = S.splits_from_flat(best_gain, best_idx, n_bins=n_bins,
+                                    min_gain=min_gain_)
+        else:
+            hist = H.build_histograms_jnp(codes, node_pos, stats,
+                                          n_nodes=n_nodes, n_bins=n_bins)
+            gain = S.split_scores(hist, lam, min_data, feature_mask)
+            sp = S.best_splits(gain, min_gain_)
         off = n_nodes - 1
         heap_feat = jax.lax.dynamic_update_slice(heap_feat, sp.feat, (off,))
         heap_thr = jax.lax.dynamic_update_slice(heap_thr, sp.thr, (off,))

@@ -15,6 +15,15 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hist_kernel import histogram_pallas
+from repro.kernels.split_kernel import split_scan_pallas
+
+
+def _resolve_lane_pad(lane_pad: int | None, interpret: bool) -> int:
+    """Channel-axis padding: full 128-lane MXU/VPU alignment for the compiled
+    Mosaic path, 8 in interpret mode to keep CPU parity tests cheap."""
+    if lane_pad is not None:
+        return lane_pad
+    return 8 if interpret else 128
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int, value=0):
@@ -32,16 +41,17 @@ def _pad_to(x: jax.Array, mult: int, axis: int, value=0):
                                              "interpret"))
 def histogram(codes: jax.Array, node_pos: jax.Array, stats: jax.Array, *,
               n_nodes: int, n_bins: int, row_tile: int = 256,
-              nb_chunk: int = 2048, lane_pad: int = 8,
+              nb_chunk: int = 2048, lane_pad: int | None = None,
               interpret: bool = True) -> jax.Array:
     """(n, m) codes + (n,) nodes + (n, c) stats -> (n_nodes, m, n_bins, c).
 
     Padded rows carry zero stats (and node 0 / bin 0), contributing nothing.
-    The channel axis is padded to ``lane_pad`` for MXU lane alignment (the TPU
-    deployment would use 128; tests keep 8 to stay cheap in interpret mode).
+    The channel axis is padded to ``lane_pad`` for MXU lane alignment
+    (default: 128 compiled, 8 in interpret mode to stay cheap in tests).
     """
     n, m = codes.shape
     c = stats.shape[1]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
     codes_t = _pad_to(codes.T.astype(jnp.int32), row_tile, axis=1)
     node_p = _pad_to(node_pos.astype(jnp.int32), row_tile, axis=0)
     stats_p = _pad_to(_pad_to(stats.astype(jnp.float32), lane_pad, axis=1),
@@ -54,6 +64,73 @@ def histogram(codes: jax.Array, node_pos: jax.Array, stats: jax.Array, *,
                             nb_chunk=nb_chunk, interpret=interpret)
     hist = hist[:, :, :c]                                  # strip lane padding
     return hist.reshape(m, n_nodes, n_bins, c).transpose(1, 0, 2, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "m_tile",
+                                             "lane_pad", "interpret"))
+def split_scan(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
+               feature_mask: jax.Array | None = None, *, n_nodes: int,
+               n_bins: int, m_tile: int = 8, lane_pad: int | None = None,
+               interpret: bool = True):
+    """(m, n_nodes * n_bins, c) histograms -> per-node (best_gain, best_idx).
+
+    ``best_idx`` encodes ``feature * n_bins + bin``; gain is -inf for nodes
+    with no legal split.  Pads the feature axis to ``m_tile`` (padded features
+    are masked out) and the channel axis to ``lane_pad`` (zero channels add
+    nothing to the squared norms).
+    """
+    m, _, c = hist.shape
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    mask = (jnp.ones((m,), jnp.float32) if feature_mask is None
+            else feature_mask.astype(jnp.float32))
+    hist_p = _pad_to(_pad_to(hist.astype(jnp.float32), lane_pad, axis=2),
+                     m_tile, axis=0)
+    mask_p = _pad_to(mask, m_tile, axis=0)[:, None]
+    params = jnp.stack([jnp.float32(lam), jnp.float32(min_data)])[None, :]
+    gain, idx = split_scan_pallas(hist_p, params, mask_p, n_nodes=n_nodes,
+                                  n_bins=n_bins, n_channels=c, m_tile=m_tile,
+                                  lane_pad=lane_pad, interpret=interpret)
+    return gain[:, 0], idx[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "row_tile",
+                                             "nb_chunk", "m_tile", "lane_pad",
+                                             "interpret"))
+def histogram_splits(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
+                     lam: jax.Array, min_data: jax.Array,
+                     feature_mask: jax.Array | None = None, *, n_nodes: int,
+                     n_bins: int, row_tile: int = 256, nb_chunk: int = 2048,
+                     m_tile: int = 8, lane_pad: int | None = None,
+                     interpret: bool = True):
+    """Fused hot path: histogram kernel -> split-scan kernel, no transpose.
+
+    The intermediate histograms stay in the kernels' native
+    ``(m, n_nodes * n_bins, C)`` layout (lane-padded channels included), so the
+    only host-side work between the two Pallas calls is a feature-axis pad.
+    Returns per-node ``(best_gain, best_idx)`` as in `split_scan`.
+    """
+    n, m = codes.shape
+    c = stats.shape[1]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    codes_t = _pad_to(codes.T.astype(jnp.int32), row_tile, axis=1)
+    node_p = _pad_to(node_pos.astype(jnp.int32), row_tile, axis=0)
+    stats_p = _pad_to(_pad_to(stats.astype(jnp.float32), lane_pad, axis=1),
+                      row_tile, axis=0)
+    nb_chunk = min(nb_chunk, n_nodes * n_bins)
+    while (n_nodes * n_bins) % nb_chunk:
+        nb_chunk //= 2
+    hist = histogram_pallas(codes_t, node_p, stats_p, n_nodes=n_nodes,
+                            n_bins=n_bins, row_tile=row_tile,
+                            nb_chunk=nb_chunk, interpret=interpret)
+    mask = (jnp.ones((m,), jnp.float32) if feature_mask is None
+            else feature_mask.astype(jnp.float32))
+    hist_p = _pad_to(hist, m_tile, axis=0)
+    mask_p = _pad_to(mask, m_tile, axis=0)[:, None]
+    params = jnp.stack([jnp.float32(lam), jnp.float32(min_data)])[None, :]
+    gain, idx = split_scan_pallas(hist_p, params, mask_p, n_nodes=n_nodes,
+                                  n_bins=n_bins, n_channels=c, m_tile=m_tile,
+                                  lane_pad=lane_pad, interpret=interpret)
+    return gain[:, 0], idx[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -91,5 +168,6 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 # Re-export the oracles for convenience.
 histogram_ref = ref.histogram_ref
+split_scan_ref = ref.split_scan_ref
 mha_ref = ref.mha_ref
 decode_attention_ref = ref.decode_attention_ref

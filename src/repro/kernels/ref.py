@@ -26,6 +26,41 @@ def histogram_ref(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
     return hist.reshape(m, n_nodes, n_bins, -1).transpose(1, 0, 2, 3)
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def split_scan_ref(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
+                   mask: jax.Array, *, n_nodes: int, n_bins: int):
+    """Oracle for the split-scan kernel, in its native histogram layout.
+
+    Args:
+      hist: (m, n_nodes * n_bins, c) — channels [0:c-1] gradient sums, [c-1]
+            counts (NO lane padding here; the wrapper strips it first).
+      mask: (m,) float32; 0 disables a feature.
+    Returns:
+      (best_gain, best_idx): each (n_nodes,); idx = feature * n_bins + bin,
+      gain = -inf when the node has no legal split.
+    """
+    m = hist.shape[0]
+    h = hist.reshape(m, n_nodes, n_bins, -1).transpose(1, 0, 2, 3)
+    csum = jnp.cumsum(h, axis=2)                           # (nodes, m, B, c)
+    total = csum[:, :, -1:, :]
+    gl, cl = csum[..., :-1], csum[..., -1]
+    gr = total[..., :-1] - gl
+    cr = total[..., -1] - cl
+    s_left = jnp.sum(jnp.square(gl), axis=-1) / (cl + lam)
+    s_right = jnp.sum(jnp.square(gr), axis=-1) / (cr + lam)
+    s_parent = (jnp.sum(jnp.square(total[..., :-1]), axis=-1)
+                / (total[..., -1] + lam))
+    gain = 0.5 * (s_left + s_right - s_parent)             # (nodes, m, B)
+    legal = (jnp.arange(n_bins) < n_bins - 1)[None, None, :]
+    legal = legal & (cl >= min_data) & (cr >= min_data)
+    legal = legal & (mask[None, :, None] > 0.0)
+    gain = jnp.where(legal, gain, -jnp.inf)
+    flat = gain.reshape(n_nodes, m * n_bins)
+    idx = jnp.argmax(flat, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    return best, idx
+
+
 def _attn_mask(sq: int, sk: int, *, causal: bool, window: int | None,
                q_offset: int) -> jax.Array:
     """(sq, sk) boolean attention mask. q position i attends kv position j iff

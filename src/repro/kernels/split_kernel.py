@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: split-scan — cumulative stats + best-split arg-max.
+
+Consumes the histogram kernel's *native* ``(m, n_nodes * n_bins, C)`` layout
+(no host-side transpose between the two kernels) and produces, per tree node,
+the best ``(feature, bin)`` split under the paper's eq. (4) score
+
+    S(R) = ||sum_{i in R} g_i||^2 / (|R| + lambda),
+    gain = 0.5 * (S(R_l) + S(R_r) - S(R_parent)).
+
+Grid = ``(n_nodes, m_tiles)``; each step loads one feature tile of one node's
+histogram, computes the cumulative left/right statistics along the bin axis on
+the VPU, scores every candidate threshold, and folds its local arg-max into the
+per-node output block.  The output block for a node is revisited across the
+sequential feature-tile axis — the canonical Pallas accumulation pattern
+(init at ``ft == 0``, strict ``>`` keeps the *first* maximum, matching
+``jnp.argmax`` tie-breaking over the flattened ``(m, B)`` axis).
+
+Channel layout: ``C`` is the lane-padded stats width; the real channels are
+``[0 .. n_channels-2]`` sketched-gradient sums and ``[n_channels-1]`` counts,
+padding channels are zero.  The squared norm of the gradient block is computed
+as ``sum_c s_c^2 - count^2`` so no lane slicing is needed inside the kernel.
+
+VMEM working set per step: hist tile (MT x B x C x 4B) + its cumulative sum +
+a few (MT x B) score planes — with the default MT=8, B=256, C=128 that is
+~2 x 1 MB + 0.5 MB, comfortably inside 16 MB VMEM; the contraction-free body
+runs entirely on the VPU (8 x 128 lanes, C on the lane axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")   # python literal: jnp constants may not be captured
+
+
+def _split_scan_kernel(params_ref, mask_ref, hist_ref, gain_ref, idx_ref, *,
+                       n_bins: int, n_channels: int, m_tile: int):
+    ft = pl.program_id(1)
+    lam = params_ref[0, 0]
+    min_data = params_ref[0, 1]
+
+    hist = hist_ref[...]                                   # (MT, B, C)
+    c_pad = hist.shape[2]
+    csum = jnp.cumsum(hist, axis=1)                        # left stats for thr=b
+    # One-hot lane mask of the count channel (padding lanes are all-zero).
+    chan = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c_pad), 2)
+    cvec = (chan == n_channels - 1).astype(jnp.float32)
+
+    cl = jnp.sum(csum * cvec, axis=2)                      # (MT, B) left counts
+    sl_num = jnp.sum(csum * csum, axis=2) - cl * cl        # ||G_l||^2
+    totals = csum[:, n_bins - 1, :]                        # (MT, C) node totals
+    ct = jnp.sum(totals * cvec[0], axis=1)                 # (MT,) node counts
+    tot_num = jnp.sum(totals * totals, axis=1) - ct * ct
+    rdiff = totals[:, None, :] - csum                      # right stats
+    cr = ct[:, None] - cl
+    sr_num = jnp.sum(rdiff * rdiff, axis=2) - cr * cr
+
+    s_left = sl_num / (cl + lam)
+    s_right = sr_num / (cr + lam)
+    s_parent = tot_num / (ct + lam)
+    gain = 0.5 * (s_left + s_right - s_parent[:, None])    # (MT, B)
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (m_tile, n_bins), 1)
+    legal = (bins < n_bins - 1) & (cl >= min_data) & (cr >= min_data)
+    legal &= mask_ref[...] > 0.0                           # (MT, 1) broadcast
+    gain = jnp.where(legal, gain, NEG_INF)
+
+    flat = gain.reshape(1, m_tile * n_bins)
+    local_gain = jnp.max(flat)
+    local_idx = jnp.argmax(flat, axis=1)[0].astype(jnp.int32)
+    global_idx = ft * (m_tile * n_bins) + local_idx        # flat (feat, bin)
+
+    @pl.when(ft == 0)
+    def _init():
+        gain_ref[...] = jnp.full(gain_ref.shape, NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    cur_gain = gain_ref[...][0, 0]
+    cur_idx = idx_ref[...][0, 0]
+    better = local_gain > cur_gain
+    gain_ref[...] = jnp.broadcast_to(jnp.where(better, local_gain, cur_gain),
+                                     gain_ref.shape)
+    idx_ref[...] = jnp.broadcast_to(jnp.where(better, global_idx, cur_idx),
+                                    idx_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "n_bins", "n_channels", "m_tile", "lane_pad",
+                     "interpret"))
+def split_scan_pallas(hist: jax.Array, params: jax.Array, mask: jax.Array, *,
+                      n_nodes: int, n_bins: int, n_channels: int,
+                      m_tile: int = 8, lane_pad: int = 8,
+                      interpret: bool = True):
+    """Raw kernel entry (padded inputs required — use `ops.split_scan`).
+
+    Args:
+      hist:   (m_pad, n_nodes * n_bins, C) float32, m_pad % m_tile == 0;
+              channels beyond ``n_channels`` must be zero padding.
+      params: (1, 2) float32 [lambda, min_data_in_leaf] (SMEM scalars).
+      mask:   (m_pad, 1) float32; 0 disables a feature (colsample / padding).
+    Returns:
+      (best_gain, best_idx): each (n_nodes, lane_pad) with the per-node result
+      broadcast across lanes — callers read column 0.  ``best_idx`` encodes
+      ``feature * n_bins + bin``; ``best_gain`` is -inf when no legal split.
+    """
+    m_pad, nb_total, c = hist.shape
+    assert m_pad % m_tile == 0 and nb_total == n_nodes * n_bins
+    grid = (n_nodes, m_pad // m_tile)
+
+    return pl.pallas_call(
+        functools.partial(_split_scan_kernel, n_bins=n_bins,
+                          n_channels=n_channels, m_tile=m_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m_tile, 1), lambda node, ft: (ft, 0)),
+            pl.BlockSpec((m_tile, n_bins, c), lambda node, ft: (ft, node, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lane_pad), lambda node, ft: (node, 0)),
+            pl.BlockSpec((1, lane_pad), lambda node, ft: (node, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_nodes, lane_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_nodes, lane_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(params, mask, hist)

@@ -1,0 +1,78 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The real property-based tests want `hypothesis` (declared in
+requirements-dev.txt / the `dev` extra).  Some execution environments cannot
+install it; rather than skip whole modules at collection time, this shim
+implements the tiny slice of the API the test-suite uses — ``given``,
+``settings`` and the ``integers`` / ``sampled_from`` strategies — by running
+each property against ``max_examples`` pseudo-random draws from a fixed seed.
+
+It is intentionally *not* a shrinker or a coverage-guided fuzzer; it exists so
+the seed tests stay runnable (and deterministic) everywhere.  `tests/conftest.py`
+installs it into ``sys.modules`` only when the real package is missing.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    sampled_from=sampled_from,
+    booleans=booleans,
+    floats=floats,
+)
+
+
+def settings(**kwargs):
+    """Decorator recording settings; only ``max_examples`` is honoured."""
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Run the property against fixed-seed draws (default 10 examples)."""
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_fallback_settings",
+                        getattr(fn, "_fallback_settings", {})).get(
+                            "max_examples", 10)
+            rnd = random.Random(0)
+            for _ in range(n):
+                fn(*[s.example(rnd) for s in strats])
+        # Keep a zero-arg signature so pytest does not look for fixtures
+        # matching the property's parameter names.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._fallback_settings = getattr(fn, "_fallback_settings", {})
+        return runner
+    return deco

@@ -1,7 +1,24 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device (the
-dry-run owns the 512-device placeholder world; see launch/dryrun.py)."""
+dry-run owns the 512-device placeholder world; see launch/dryrun.py).
+
+If `hypothesis` is not installed (it is a dev-extra, see requirements-dev.txt),
+install the deterministic fallback shim from `_hypothesis_fallback.py` so the
+property-based seed tests still collect and run everywhere.
+"""
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+if importlib.util.find_spec("hypothesis") is None:
+    _path = os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 
 @pytest.fixture(scope="session")

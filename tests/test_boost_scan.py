@@ -1,0 +1,156 @@
+"""Compiled (lax.scan) boosting loop vs the per-round python reference loop.
+
+The scan rewrite must be a pure execution-strategy change: under a fixed seed
+the two loops must produce *identical* forests (feat/thr exactly, values to
+float tolerance), identical early-stopping decisions, and identical
+validation-loss trajectories.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree as T
+from repro.core.boosting import GBDTConfig, SketchBoost, boost_scan
+from repro.data.pipeline import make_tabular, train_test_split
+
+
+def _fit_both(cfg_kw, fit_kw=None):
+    X, y = make_tabular("multiclass", 900, 10, 5, seed=11)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, seed=11)
+    fit_kw = dict(fit_kw or {})
+    if fit_kw.pop("eval", False):
+        fit_kw["eval_set"] = (Xte, yte)
+    m_scan = SketchBoost(GBDTConfig(loop="scan", **cfg_kw)).fit(Xtr, ytr,
+                                                               **fit_kw)
+    m_py = SketchBoost(GBDTConfig(loop="python", **cfg_kw)).fit(Xtr, ytr,
+                                                                **fit_kw)
+    return m_scan, m_py
+
+
+def _assert_forests_identical(m1, m2):
+    np.testing.assert_array_equal(np.asarray(m1.forest.feat),
+                                  np.asarray(m2.forest.feat))
+    np.testing.assert_array_equal(np.asarray(m1.forest.thr),
+                                  np.asarray(m2.forest.thr))
+    np.testing.assert_allclose(np.asarray(m1.forest.value),
+                               np.asarray(m2.forest.value),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["single_tree", "one_vs_all"])
+def test_scan_loop_matches_python_loop(strategy):
+    cfg_kw = dict(loss="multiclass", strategy=strategy, n_trees=11, depth=4,
+                  learning_rate=0.3, sketch_method="random_projection",
+                  sketch_k=3, scan_chunk=4, seed=7)   # uneven final chunk
+    m_scan, m_py = _fit_both(cfg_kw)
+    _assert_forests_identical(m_scan, m_py)
+
+
+def test_scan_loop_matches_python_loop_with_sampling():
+    """SGB + colsample consume PRNG keys — the split sequence must line up."""
+    cfg_kw = dict(loss="multiclass", n_trees=8, depth=3, learning_rate=0.3,
+                  subsample=0.8, colsample=0.7, scan_chunk=3, seed=5)
+    m_scan, m_py = _fit_both(cfg_kw)
+    _assert_forests_identical(m_scan, m_py)
+
+
+def test_scan_early_stopping_matches_python():
+    cfg_kw = dict(loss="multiclass", n_trees=50, depth=3, learning_rate=1.0,
+                  early_stopping_rounds=4, scan_chunk=8)
+    m_scan, m_py = _fit_both(cfg_kw, {"eval": True})
+    assert m_scan.forest.n_trees == m_py.forest.n_trees
+    assert m_scan.best_round == m_py.best_round
+    _assert_forests_identical(m_scan, m_py)
+    vl_scan = [r["valid_loss"] for r in m_scan.history if "valid_loss" in r]
+    vl_py = [r["valid_loss"] for r in m_py.history if "valid_loss" in r]
+    np.testing.assert_allclose(vl_scan, vl_py, rtol=1e-5, atol=1e-6)
+
+
+def test_scan_eval_every_matches_python():
+    """eval_every > 1: both loops apply every tree to Fv and only *score* on
+    eval rounds, so trajectories and stopping agree round-for-round."""
+    cfg_kw = dict(loss="multiclass", n_trees=24, depth=3, learning_rate=0.5,
+                  eval_every=3, early_stopping_rounds=6, scan_chunk=7)
+    m_scan, m_py = _fit_both(cfg_kw, {"eval": True})
+    assert m_scan.forest.n_trees == m_py.forest.n_trees
+    assert m_scan.best_round == m_py.best_round
+    vl_scan = [r["valid_loss"] for r in m_scan.history if "valid_loss" in r]
+    vl_py = [r["valid_loss"] for r in m_py.history if "valid_loss" in r]
+    assert len(vl_scan) == len(vl_py)
+    np.testing.assert_allclose(vl_scan, vl_py, rtol=1e-5, atol=1e-6)
+    _assert_forests_identical(m_scan, m_py)
+
+
+def test_scan_history_times_monotone():
+    X, y = make_tabular("multiclass", 400, 6, 3, seed=2)
+    m = SketchBoost(GBDTConfig(n_trees=10, depth=3, scan_chunk=4)).fit(X, y)
+    times = [r["train_time_s"] for r in m.history]
+    assert len(times) == 10
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+def test_scan_single_segment_and_singleton_chunks():
+    """chunk >= n_trees (one segment) and chunk == 1 (n segments) both work."""
+    base = dict(loss="multiclass", n_trees=6, depth=3, learning_rate=0.3,
+                seed=3)
+    X, y = make_tabular("multiclass", 500, 8, 4, seed=3)
+    forests = []
+    for chunk in (1, 6, 100):
+        m = SketchBoost(GBDTConfig(loop="scan", scan_chunk=chunk,
+                                   **base)).fit(X, y)
+        forests.append(m.forest)
+    for f in forests[1:]:
+        np.testing.assert_array_equal(np.asarray(forests[0].feat),
+                                      np.asarray(f.feat))
+        np.testing.assert_allclose(np.asarray(forests[0].value),
+                                   np.asarray(f.value), rtol=1e-6)
+
+
+def test_boost_scan_stacks_trees():
+    """boost_scan returns (n_steps,)-leading Tree buffers + loss trajectory."""
+    X, y = make_tabular("multiclass", 400, 6, 3, seed=1)
+    m = SketchBoost(GBDTConfig(n_trees=1, depth=3))   # for binning/prep only
+    m.fit(X, y)
+    codes = m._bin(X)
+    Y = m._targets(y, 3)
+    d, n = 3, codes.shape[0]
+    cfg = dataclasses.replace(m.cfg, n_trees=5)
+    F = jnp.broadcast_to(m.base_score, (n, d)).astype(jnp.float32)
+    key = jax.random.key(0)
+    F, Fv, key, trees, vloss = boost_scan(
+        F, codes, Y, F[:1], codes[:1], Y[:1], key, cfg=cfg, n_steps=5,
+        has_eval=False)
+    assert trees.feat.shape == (5, 2 ** cfg.depth - 1)
+    assert trees.value.shape == (5, 2 ** cfg.depth, d)
+    assert vloss.shape == (5,)
+    assert bool(jnp.all(vloss == 0.0))
+
+    # with an eval set the trajectory is finite and recorded every round
+    # (F and Fv are donated buffers — they must be distinct arrays)
+    F2 = jnp.broadcast_to(m.base_score, (n, d)).astype(jnp.float32)
+    Fv2 = jnp.array(F2)
+    _, _, _, _, vloss2 = boost_scan(
+        F2, codes, Y, Fv2, codes, Y, jax.random.key(0), cfg=cfg, n_steps=5,
+        has_eval=True)
+    assert np.all(np.isfinite(np.asarray(vloss2)))
+    # training loss must improve over the segment
+    assert float(vloss2[-1]) < float(vloss2[0])
+
+
+def test_scan_loop_is_default():
+    assert GBDTConfig().loop == "scan"
+
+
+def test_predict_matches_replay_after_scan_fit():
+    X, y = make_tabular("multiclass", 400, 8, 4, seed=6)
+    cfg = GBDTConfig(loss="multiclass", n_trees=12, depth=3,
+                     learning_rate=0.2, sketch_method="none", scan_chunk=5)
+    m = SketchBoost(cfg).fit(X, y)
+    codes = m._bin(X)
+    F_replay = np.asarray(T.predict_forest(m.forest, codes,
+                                           cfg.learning_rate, m.base_score))
+    np.testing.assert_allclose(np.asarray(m.predict_raw(X)), F_replay,
+                               rtol=1e-5, atol=1e-5)

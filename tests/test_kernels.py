@@ -44,6 +44,118 @@ def test_histogram_kernel_dtypes(dtype):
 
 
 # ---------------------------------------------------------------------------
+# Split-scan kernel
+# ---------------------------------------------------------------------------
+
+def _random_hist_problem(seed, n, m, B, nodes, k):
+    """Random binned data -> (m, nodes*B, c) histograms + core split answer."""
+    from repro.core import histogram as H
+    from repro.core import split as S
+    ks = jax.random.split(jax.random.key(seed), 3)
+    codes = jax.random.randint(ks[0], (n, m), 0, B, jnp.int32)
+    node = jax.random.randint(ks[1], (n,), 0, nodes, jnp.int32)
+    stats = jnp.concatenate(
+        [jax.random.normal(ks[2], (n, k), jnp.float32),
+         jnp.ones((n, 1), jnp.float32)], axis=1)
+    hist4 = H.build_histograms_jnp(codes, node, stats, n_nodes=nodes, n_bins=B)
+    hist_mnb = hist4.transpose(1, 0, 2, 3).reshape(m, nodes * B, k + 1)
+    return codes, node, stats, hist4, hist_mnb, S
+
+
+@pytest.mark.parametrize("n,m,B,nodes,k", [
+    (128, 3, 8, 1, 2),       # root node
+    (512, 11, 16, 4, 3),     # feature count off the m_tile grid (padding path)
+    (300, 8, 32, 8, 5),
+    (256, 4, 256, 2, 1),     # full 256-bin scan
+])
+def test_split_scan_kernel_matches_ref(n, m, B, nodes, k):
+    _, _, _, _, hist_mnb, _ = _random_hist_problem(n + m, n, m, B, nodes, k)
+    lam, min_data = jnp.float32(1.0), jnp.float32(2.0)
+    mask = jnp.ones((m,), jnp.float32)
+    g_ref, i_ref = ref.split_scan_ref(hist_mnb, lam, min_data, mask,
+                                      n_nodes=nodes, n_bins=B)
+    g_ker, i_ker = ops.split_scan(hist_mnb, lam, min_data, n_nodes=nodes,
+                                  n_bins=B, interpret=True)
+    np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_ker), np.asarray(i_ref))
+
+
+def test_split_scan_ref_matches_core_split():
+    """The kernel oracle and core/split.py agree on gain AND arg-max."""
+    _, _, _, hist4, hist_mnb, S = _random_hist_problem(0, 400, 9, 16, 4, 3)
+    lam, min_data = jnp.float32(1.0), jnp.float32(1.0)
+    gain = S.split_scores(hist4, lam, min_data)
+    flat = gain.reshape(4, 9 * 16)
+    g_ref, i_ref = ref.split_scan_ref(hist_mnb, lam, min_data,
+                                      jnp.ones((9,), jnp.float32),
+                                      n_nodes=4, n_bins=16)
+    np.testing.assert_allclose(np.asarray(g_ref), np.asarray(jnp.max(flat, 1)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_ref),
+                                  np.asarray(jnp.argmax(flat, 1)))
+
+
+def test_split_scan_kernel_feature_mask():
+    _, _, _, _, hist_mnb, _ = _random_hist_problem(3, 300, 10, 16, 2, 2)
+    lam, min_data = jnp.float32(1.0), jnp.float32(1.0)
+    mask = (jnp.arange(10) % 3 != 0).astype(jnp.float32)
+    g_ref, i_ref = ref.split_scan_ref(hist_mnb, lam, min_data, mask,
+                                      n_nodes=2, n_bins=16)
+    g_ker, i_ker = ops.split_scan(hist_mnb, lam, min_data, mask, n_nodes=2,
+                                  n_bins=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_ker), np.asarray(i_ref))
+    # masked features never win
+    assert not np.any(np.isin(np.asarray(i_ker) // 16, [0, 3, 6, 9]))
+
+
+def test_split_scan_kernel_no_legal_split():
+    """min_data too high -> every node reports -inf / idx 0 (leaf demotion)."""
+    _, _, _, _, hist_mnb, _ = _random_hist_problem(4, 64, 4, 8, 2, 2)
+    g_ker, i_ker = ops.split_scan(hist_mnb, jnp.float32(1.0),
+                                  jnp.float32(1e9), n_nodes=2, n_bins=8,
+                                  interpret=True)
+    assert np.all(np.asarray(g_ker) == -np.inf)
+    assert np.all(np.asarray(i_ker) == 0)
+
+
+def test_fused_histogram_splits_matches_two_step():
+    codes, node, stats, _, hist_mnb, _ = _random_hist_problem(
+        5, 500, 7, 16, 4, 3)
+    lam, min_data = jnp.float32(0.5), jnp.float32(1.0)
+    g_two, i_two = ref.split_scan_ref(hist_mnb, lam, min_data,
+                                      jnp.ones((7,), jnp.float32),
+                                      n_nodes=4, n_bins=16)
+    g_fused, i_fused = ops.histogram_splits(codes, node, stats, lam, min_data,
+                                            n_nodes=4, n_bins=16,
+                                            interpret=True)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_two),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_fused), np.asarray(i_two))
+
+
+def test_grow_tree_kernel_mode_matches_jnp():
+    from repro.core import tree as T
+    rng = np.random.default_rng(2)
+    n, m, d, depth = 256, 7, 3, 4
+    codes = jnp.asarray(rng.integers(0, 16, (n, m)).astype(np.uint8))
+    G = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    Hd = jnp.ones((n, d), jnp.float32)
+    stats = jnp.concatenate([G, jnp.ones((n, 1), jnp.float32)], 1)
+    t1, p1 = T.grow_tree(codes, stats, G, Hd, depth=depth, n_bins=16,
+                         lam=1.0, use_kernel="jnp")
+    t2, p2 = T.grow_tree(codes, stats, G, Hd, depth=depth, n_bins=16,
+                         lam=1.0, use_kernel="interpret")
+    np.testing.assert_array_equal(np.asarray(t1.feat), np.asarray(t2.feat))
+    np.testing.assert_array_equal(np.asarray(t1.thr), np.asarray(t2.thr))
+    np.testing.assert_allclose(np.asarray(t1.value), np.asarray(t2.value),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ---------------------------------------------------------------------------
 # Flash attention kernel
 # ---------------------------------------------------------------------------
 
