@@ -10,6 +10,7 @@ vs one-vs-all, time vs d) are the reproduction targets.
   fig1     time vs output dimension d                     (paper Fig. 1/4)
   fig3     learning curves full vs sketch                 (paper Fig. 3)
   rounds   boosting rounds to convergence                 (paper Table 13)
+  predict  packed-forest inference baseline               (-> BENCH_predict.json)
   kernels  Pallas kernel vs jnp oracle timings (CPU interpret; structural)
   compression  sketched vs exact DP all-reduce bytes      (beyond-paper)
 
@@ -31,6 +32,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
 
 QUICK = dict(n=6000, m=40, trees=60, depth=5, es=20)
 FULL = dict(n=60000, m=80, trees=300, depth=6, es=50)
+SMOKE = dict(n=800, m=10, trees=10, depth=4, es=0)     # CI-speed shapes
 
 
 def _cfg(loss, method, k, scale, seed=0, **kw):
@@ -198,6 +200,111 @@ def bench_gbdt(scale) -> List[Dict]:
     return rows
 
 
+PRED_QUICK = dict(n=4000, m=20, d=6, trees=40, depth=5, bins=64, n_pred=20000)
+PRED_FULL = dict(n=40000, m=60, d=16, trees=200, depth=6, bins=256,
+                 n_pred=100000)
+PRED_SMOKE = dict(n=600, m=10, d=4, trees=10, depth=4, bins=32, n_pred=2000)
+
+
+def bench_predict(scale) -> List[Dict]:
+    """Inference baseline: compiled packed-forest predict vs legacy paths.
+
+    For models trained at ``sketch_k in {2, 5, full}`` (the forest shape is
+    identical — k only changes which trees get grown), times three ways of
+    scoring ``n_pred`` rows:
+
+      * ``packed_chunked``   — `forest.predict_raw` on the `PackedForest`
+                               (kernel-mode dispatched, chunk-streamed);
+      * ``forest_scan``      — `tree.predict_forest`, the stacked-buffer scan
+                               retained as the parity reference;
+      * ``python_per_tree``  — one `tree.predict_tree` dispatch per tree,
+                               the seed repo's uncompiled serving shape.
+
+    `BENCH_predict.json` at the repo root is the standing baseline: diff
+    ``rows_per_sec`` (warm, 2nd call) across PRs.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import forest as FO
+    from repro.core import tree as T
+    from repro.core.boosting import GBDTConfig, SketchBoost
+    from repro.core.histogram import resolve_kernel_mode
+    from repro.data.pipeline import make_tabular
+
+    sc = (PRED_FULL if scale is FULL else
+          PRED_SMOKE if scale is SMOKE else PRED_QUICK)
+    mode = resolve_kernel_mode(True)
+    X, y = make_tabular("multiclass", sc["n"], sc["m"], sc["d"], seed=0)
+    rng = np.random.default_rng(1)
+    X_pred = X[rng.integers(0, sc["n"], size=sc["n_pred"])]
+
+    rows: List[Dict] = []
+    for k_label, method, k in ((2, "random_projection", 2),
+                               (5, "random_projection", 5),
+                               ("full", "none", 0)):
+        cfg = GBDTConfig(loss="multiclass", sketch_method=method, sketch_k=k,
+                         n_trees=sc["trees"], depth=sc["depth"],
+                         n_bins=sc["bins"], learning_rate=0.1, seed=0)
+        model = SketchBoost(cfg).fit(X, y)
+        codes = model._bin(X_pred)
+        pf, forest = model.packed, model.forest
+        chunk = min(4000, sc["n_pred"])    # even divisor: no tail padding
+
+        def packed_chunked():
+            return FO.predict_raw(pf, codes, mode=mode, row_chunk=chunk)
+
+        def forest_scan():
+            return T.predict_forest(forest, codes, cfg.learning_rate,
+                                    model.base_score)
+
+        def python_per_tree():
+            acc = jnp.broadcast_to(model.base_score,
+                                   (codes.shape[0], sc["d"]))
+            for i in range(forest.n_trees):
+                tr = T.Tree(feat=forest.feat[i], thr=forest.thr[i],
+                            value=forest.value[i], gain=forest.feat[i])
+                acc = acc + cfg.learning_rate * T.predict_tree(tr, codes)
+            return acc
+
+        for name, fn in (("packed_chunked", packed_chunked),
+                         ("forest_scan", forest_scan),
+                         ("python_per_tree", python_per_tree)):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn())
+            cold = time.perf_counter() - t0
+            warm = np.inf                   # best-of-3: robust to CPU noise
+            for _ in range(3):
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(fn())
+                warm = min(warm, time.perf_counter() - t0)
+            rows.append({
+                "sketch_k": k_label, "path": name,
+                "n_pred": sc["n_pred"], "trees": int(forest.n_trees),
+                "depth": sc["depth"], "d": sc["d"],
+                "cold_time_s": round(cold, 4), "warm_time_s": round(warm, 4),
+                "rows_per_sec": round(sc["n_pred"] / warm),
+                "checksum": round(float(jnp.sum(out)), 2),
+            })
+            print(f"  predict k={k_label} {name}: "
+                  f"{rows[-1]['rows_per_sec']:,} rows/s "
+                  f"(warm {warm:.3f}s)", flush=True)
+
+    payload = {
+        "bench": "forest_predict",
+        "backend": jax.default_backend(),
+        "kernel_mode": mode,
+        "scale": sc,
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_predict.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:predict] wrote {os.path.join(root, 'BENCH_predict.json')}",
+          flush=True)
+    return rows
+
+
 def bench_kernels() -> List[Dict]:
     """Pallas (interpret) vs jnp oracle — correctness + structural cost.
     Wall-clock on CPU interpret mode is NOT the TPU number; report analytic
@@ -269,6 +376,7 @@ def bench_compression() -> List[Dict]:
 
 BENCHES = {
     "gbdt": lambda sc: bench_gbdt(sc),
+    "predict": lambda sc: bench_predict(sc),
     "table1": lambda sc: bench_table1(sc),
     "fig1": lambda sc: bench_fig1(sc),
     "fig3": lambda sc: bench_fig3(sc),
@@ -285,8 +393,10 @@ def main() -> None:
                     help="subset to run (default: all)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed tiny shapes (predict/gbdt smokes)")
     args = ap.parse_args()
-    scale = FULL if args.full else QUICK
+    scale = FULL if args.full else SMOKE if args.smoke else QUICK
     names = args.benches or list(BENCHES)
     os.makedirs(RESULTS_DIR, exist_ok=True)
 

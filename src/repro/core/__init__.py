@@ -1,5 +1,8 @@
 """SketchBoost core: sketched split scoring GBDT (the paper's contribution)."""
 from repro.core.boosting import GBDTConfig, SketchBoost, boost_step
+from repro.core.forest import (PackedForest, pack_forest, predict_staged,
+                               slice_rounds, unpack_forest)
+from repro.core.forest import predict_raw as predict_packed
 from repro.core.losses import LOSSES, get_loss
 from repro.core.sketch import SKETCH_METHODS, build_sketch, sketch_sharded
 from repro.core.tree import Forest, Tree, grow_tree, predict_forest
@@ -7,5 +10,6 @@ from repro.core.tree import Forest, Tree, grow_tree, predict_forest
 __all__ = [
     "GBDTConfig", "SketchBoost", "boost_step", "LOSSES", "get_loss",
     "SKETCH_METHODS", "build_sketch", "sketch_sharded", "Forest", "Tree",
-    "grow_tree", "predict_forest",
+    "grow_tree", "predict_forest", "PackedForest", "pack_forest",
+    "unpack_forest", "slice_rounds", "predict_packed", "predict_staged",
 ]

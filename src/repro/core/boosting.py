@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import forest as FO
 from repro.core import histogram as H
 from repro.core import losses as L
 from repro.core import quantize as Q
@@ -67,6 +68,7 @@ class GBDTConfig:
                                          # or explicit "jnp"/"pallas"/"interpret"
     loop: str = "scan"                   # "scan" (compiled rounds) | "python"
     scan_chunk: int = 32                 # rounds per scan segment (host boundary)
+    predict_row_chunk: int = 65536       # rows per predict dispatch (0 = all)
     seed: int = 0
 
     def resolve(self, d: int) -> "GBDTConfig":
@@ -152,7 +154,8 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     delta = jax.vmap(apply_one)(trees.feat, trees.thr, trees.value)  # (d, n)
     F = F + cfg.learning_rate * delta.T
     # Fold the per-output axis into a Tree whose value tensor is (d, 2^D, 1);
-    # stored as-is — predict path re-vmaps (see SketchBoost.predict_raw).
+    # `forest.pack_forest` later flattens the (T, d, ...) buffers into width-1
+    # packed trees with per-tree output columns.
     return F, trees
 
 
@@ -165,17 +168,22 @@ def boost_step(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
 
 def _apply_tree(tree: T.Tree, codes: jax.Array, F: jax.Array,
                 cfg: GBDTConfig) -> jax.Array:
-    """Add one round's contribution to the raw scores F for new data."""
+    """Add one round's contribution to the raw scores F for new data.
+
+    Routed through `forest.forest_apply`, the same traversal primitive the
+    packed-forest serving path uses — so on-device validation eval inside
+    the scan loop runs the Pallas traversal kernel whenever the split-search
+    kernels do (``use_kernel`` auto-resolution), and bit-matches serving.
+    """
     if cfg.strategy == "single_tree":
-        pos = T.tree_leaf_index(tree.feat, tree.thr, codes, depth=cfg.depth)
-        return F + cfg.learning_rate * tree.value[pos]
-
-    def apply_one(f, t, v):
-        pos = T.tree_leaf_index(f, t, codes, depth=cfg.depth)
-        return v[pos, 0]
-
-    delta = jax.vmap(apply_one)(tree.feat, tree.thr, tree.value)
-    return F + cfg.learning_rate * delta.T
+        feat, thr, leaf = tree.feat[None], tree.thr[None], tree.value[None]
+        out_col = jnp.zeros((1,), jnp.int32)
+    else:                                    # one round = d univariate trees
+        feat, thr, leaf = tree.feat, tree.thr, tree.value
+        out_col = jnp.arange(feat.shape[0], dtype=jnp.int32)
+    return FO.forest_apply(F, codes, feat, thr, leaf, out_col,
+                           cfg.learning_rate, depth=cfg.depth,
+                           mode=cfg.use_kernel)
 
 
 @functools.partial(jax.jit,
@@ -227,6 +235,7 @@ class SketchBoost:
         self.cfg = cfg
         self.quantizer: Optional[Q.Quantizer] = None
         self.forest: Optional[T.Forest] = None
+        self.packed: Optional[FO.PackedForest] = None
         self.base_score: Optional[jax.Array] = None
         self.history: List[Dict[str, Any]] = []
         self.best_round: int = -1
@@ -295,6 +304,9 @@ class SketchBoost:
             raise ValueError(f"unknown loop {cfg.loop!r}; "
                              "expected 'scan' or 'python'")
         self.cfg = cfg
+        self.packed = FO.pack_forest(self.forest, self.base_score,
+                                     cfg.learning_rate,
+                                     strategy=cfg.strategy)
         return self
 
     def _fit_scan(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
@@ -395,23 +407,26 @@ class SketchBoost:
         self.forest = T.stack_trees(trees)
 
     # -- inference ----------------------------------------------------------
-    def predict_raw(self, X) -> jax.Array:
-        codes = self._bin(np.asarray(X, np.float32))
-        if self.cfg.strategy == "single_tree":
-            return T.predict_forest(self.forest, codes, self.cfg.learning_rate,
-                                    self.base_score)
-        # one_vs_all: forest arrays are (T, d, ...); fold T*d and vmap over d.
-        def per_output(f, t, v, base_j):
-            forest = T.Forest(feat=f, thr=t, value=v)
-            return T.predict_forest(forest, codes, self.cfg.learning_rate,
-                                    base_j[None])[:, 0]
-        out = jax.vmap(per_output, in_axes=(1, 1, 1, 0), out_axes=1)(
-            self.forest.feat, self.forest.thr, self.forest.value,
-            self.base_score)
-        return out
+    @property
+    def best_iteration(self) -> int:
+        """Number of boosting rounds up to (and including) the best one."""
+        return self.best_round + 1
 
-    def predict(self, X) -> jax.Array:
-        return L.get_loss(self.cfg.loss).transform(self.predict_raw(X))
+    def predict_raw(self, X, iteration: Optional[int] = None) -> jax.Array:
+        """Raw scores through the packed-forest engine (chunk-streamed,
+        kernel-mode dispatched).  ``iteration`` slices the ensemble to the
+        first ``iteration`` rounds (e.g. ``model.best_iteration``) for free.
+        """
+        codes = self._bin(np.asarray(X, np.float32))
+        pf = self.packed
+        if iteration is not None:
+            pf = FO.slice_rounds(pf, iteration)
+        return FO.predict_raw(pf, codes, mode=self.cfg.use_kernel,
+                              row_chunk=self.cfg.predict_row_chunk)
+
+    def predict(self, X, iteration: Optional[int] = None) -> jax.Array:
+        return L.get_loss(self.cfg.loss).transform(
+            self.predict_raw(X, iteration))
 
     def eval_loss(self, X, y) -> float:
         d = self.cfg.n_outputs

@@ -1,0 +1,279 @@
+"""PackedForest: structure-of-arrays ensemble format + compiled inference.
+
+Training (`core/boosting.py`) produces scan-stacked per-tree buffers; this
+module packs them into a single serving-ready structure-of-arrays — the same
+idea as the packed node lists GPU GBDT systems traverse (XGBoost-GPU,
+Mitchell et al. 2018) — and provides every inference entry point on top of
+it:
+
+  * `forest_apply`       — one fused "add these trees to these scores" op,
+                           dispatched to the Pallas traversal kernel
+                           (`kernels/predict_kernel.py`) or its gather-based
+                           jnp reference under the same ``use_kernel`` modes
+                           as the training kernels;
+  * `predict_raw`        — jit'd, chunk-streamed full-forest scoring (the
+                           serving hot path);
+  * `predict_staged`     — cumulative per-round scores in one compiled scan
+                           (model selection / eval curves);
+  * `slice_rounds`       — O(1) truncation to ``best_iteration``.
+
+Layout
+------
+All arrays carry a leading ``T`` (tree) axis; a tree of depth ``D`` is a
+perfect binary heap:
+
+  feat, thr   (T, 2^D - 1) int32    split feature / threshold per internal
+                                    node (go left when ``code <= thr``)
+  left, right (T, 2^D - 1) int32    explicit child pointers in global node
+                                    numbering (internal 0..2^D-2, leaves
+                                    2^D-1..2^(D+1)-2).  Stored for format
+                                    generality (node-list interchange à la
+                                    XGBoost dumps); the depth-synchronous
+                                    traversal exploits the perfect-heap
+                                    invariant ``left = 2i+1, right = 2i+2``
+                                    that `pack_forest` guarantees.
+  leaf        (T, 2^D, w) float32   multioutput leaf blocks.  ``w`` is the
+                                    *leaf width*: the full output dim ``d``
+                                    for ``single_tree`` (leaf values always
+                                    use the full gradients, eq. (3) — only
+                                    the split search is sketched to k), or 1
+                                    for ``one_vs_all`` univariate trees.
+  out_col     (T,) int32            starting output column of each tree's
+                                    leaf block (0 when ``w == d``).
+  base        (d,) float32          constant base score.
+  lr          () float32            learning rate.
+
+The whole structure is a flat pytree of arrays, so it checkpoints through
+`io.checkpoint.CheckpointManager` unchanged and crosses jit boundaries as
+plain donatable buffers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as H
+from repro.core import tree as T
+
+
+class PackedForest(NamedTuple):
+    feat: jax.Array      # (T, 2^D - 1) int32
+    thr: jax.Array       # (T, 2^D - 1) int32
+    left: jax.Array      # (T, 2^D - 1) int32 global child ids
+    right: jax.Array     # (T, 2^D - 1) int32
+    leaf: jax.Array      # (T, 2^D, w) float32
+    out_col: jax.Array   # (T,) int32
+    base: jax.Array      # (d,) float32
+    lr: jax.Array        # () float32
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return (self.feat.shape[1] + 1).bit_length() - 1
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf.shape[1]
+
+    @property
+    def leaf_width(self) -> int:
+        return self.leaf.shape[2]
+
+    @property
+    def n_outputs(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def trees_per_round(self) -> int:
+        """1 for single_tree (full-width leaves), d for one_vs_all."""
+        return 1 if self.leaf_width == self.n_outputs else self.n_outputs
+
+    @property
+    def n_rounds(self) -> int:
+        return self.n_trees // self.trees_per_round
+
+
+def _heap_children(n_trees: int, n_nodes: int) -> Tuple[jax.Array, jax.Array]:
+    left = 2 * jnp.arange(n_nodes, dtype=jnp.int32) + 1
+    return (jnp.broadcast_to(left, (n_trees, n_nodes)),
+            jnp.broadcast_to(left + 1, (n_trees, n_nodes)))
+
+
+def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
+                *, strategy: str = "single_tree") -> PackedForest:
+    """Pack the scan-stacked training buffers into a `PackedForest`.
+
+    ``single_tree`` buffers arrive as ``(T, nodes)`` / ``(T, leaves, d)``;
+    ``one_vs_all`` buffers carry an extra per-output axis ``(T, d, ...)``
+    which is folded into the tree axis in round-major order (round 0 output
+    0, round 0 output 1, ...), so `slice_rounds` and the per-column
+    accumulation order both match the training loop exactly.
+    """
+    base = jnp.asarray(base_score, jnp.float32).reshape(-1)
+    if strategy == "single_tree":
+        feat, thr, leaf = forest.feat, forest.thr, forest.value
+        out_col = jnp.zeros((feat.shape[0],), jnp.int32)
+    elif strategy == "one_vs_all":
+        n_rounds, d = forest.feat.shape[0], forest.feat.shape[1]
+        feat = forest.feat.reshape(n_rounds * d, -1)
+        thr = forest.thr.reshape(n_rounds * d, -1)
+        leaf = forest.value.reshape(n_rounds * d, forest.value.shape[2], -1)
+        out_col = jnp.tile(jnp.arange(d, dtype=jnp.int32), n_rounds)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    left, right = _heap_children(feat.shape[0], feat.shape[1])
+    return PackedForest(feat=feat.astype(jnp.int32),
+                        thr=thr.astype(jnp.int32), left=left, right=right,
+                        leaf=leaf.astype(jnp.float32), out_col=out_col,
+                        base=base, lr=jnp.float32(learning_rate))
+
+
+def unpack_forest(pf: PackedForest) -> Tuple[T.Forest, str]:
+    """Inverse of `pack_forest`: ``(Forest, strategy)`` round trip."""
+    if pf.leaf_width == pf.n_outputs:
+        return T.Forest(feat=pf.feat, thr=pf.thr, value=pf.leaf), "single_tree"
+    d = pf.n_outputs
+    n_rounds = pf.n_trees // d
+    return T.Forest(feat=pf.feat.reshape(n_rounds, d, -1),
+                    thr=pf.thr.reshape(n_rounds, d, -1),
+                    value=pf.leaf.reshape(n_rounds, d, pf.n_leaves, 1)
+                    ), "one_vs_all"
+
+
+def slice_rounds(pf: PackedForest, n_rounds: int) -> PackedForest:
+    """First ``n_rounds`` boosting rounds (e.g. ``best_iteration``) — a pure
+    slice of the tree axis, no recomputation."""
+    t = n_rounds * pf.trees_per_round
+    return pf._replace(feat=pf.feat[:t], thr=pf.thr[:t], left=pf.left[:t],
+                       right=pf.right[:t], leaf=pf.leaf[:t],
+                       out_col=pf.out_col[:t])
+
+
+# ---------------------------------------------------------------------------
+# Inference entry points.
+# ---------------------------------------------------------------------------
+
+def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
+                 thr: jax.Array, leaf: jax.Array, out_col: jax.Array, lr,
+                 *, depth: int, mode="jnp") -> jax.Array:
+    """``F_init + lr * sum_t tree_t(codes)`` under a resolved kernel mode.
+
+    The single traversal primitive shared by serving (`predict_raw`), staged
+    eval (`predict_staged`), and the training loop's on-device validation
+    update (`boosting._apply_tree`) — all three therefore run the same
+    Pallas kernel on TPU and the same gather walk elsewhere.  Accumulation
+    is tree-by-tree in both modes, so results are bit-identical across them.
+    """
+    mode = H.resolve_kernel_mode(mode)
+    if mode != "jnp":
+        from repro.kernels import ops as kops
+        return kops.forest_apply(F_init, codes, feat, thr, leaf, out_col, lr,
+                                 depth=depth, interpret=(mode == "interpret"))
+    from repro.kernels import ref
+    return ref.forest_apply_ref(F_init, codes, feat, thr, leaf, out_col,
+                                jnp.float32(lr), depth=depth)
+
+
+def predict_raw(pf: PackedForest, codes: jax.Array, *, mode="jnp",
+                row_chunk: int = 0) -> jax.Array:
+    """Raw ensemble scores ``F(x) = base + lr * sum_t f_t(x)``, streamed in
+    row chunks.
+
+    ``row_chunk > 0`` bounds the per-dispatch working set (rows x outputs
+    stay resident on-device; the forest is revisited per chunk): chunk i is
+    scored while chunk i+1's codes transfer, and every chunk reuses one
+    compiled executable — the last chunk is zero-padded to the chunk size so
+    no second trace is ever cut.  ``row_chunk == 0`` scores everything in
+    one dispatch.
+    """
+    n, d = codes.shape[0], pf.n_outputs
+    chunk = n if row_chunk <= 0 else min(row_chunk, n)
+    outs = []
+    for s in range(0, n, chunk):
+        part = codes[s:s + chunk]
+        if part.shape[0] < chunk:                 # pad tail, keep one trace
+            part = jnp.pad(part, ((0, chunk - part.shape[0]), (0, 0)))
+        F0 = jnp.broadcast_to(pf.base, (chunk, d)).astype(jnp.float32)
+        outs.append(forest_apply(F0, part, pf.feat, pf.thr, pf.leaf,
+                                 pf.out_col, pf.lr, depth=pf.depth,
+                                 mode=mode))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "trees_per_round",
+                                             "mode"))
+def _staged_scan(codes, feat, thr, leaf, out_col, base, lr, *, depth: int,
+                 trees_per_round: int, mode: str):
+    n, d = codes.shape[0], base.shape[0]
+    n_rounds = feat.shape[0] // trees_per_round
+
+    def per_round(F, xs):
+        f, th, v, col = xs
+        F = forest_apply(F, codes, f, th, v, col, lr, depth=depth, mode=mode)
+        return F, F
+
+    def group(x):
+        return x.reshape((n_rounds, trees_per_round) + x.shape[1:])
+
+    F0 = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
+    _, staged = jax.lax.scan(per_round, F0, (group(feat), group(thr),
+                                             group(leaf), group(out_col)))
+    return staged
+
+
+def predict_staged(pf: PackedForest, codes: jax.Array, *, mode="jnp"
+                   ) -> jax.Array:
+    """Cumulative raw scores after every boosting round: ``(n_rounds, n, d)``.
+
+    One compiled scan over round groups (1 tree per round for single_tree,
+    d for one_vs_all); ``staged[r]`` equals ``predict_raw`` on
+    ``slice_rounds(pf, r + 1)`` bit-for-bit.  Materialises the full
+    trajectory — meant for validation-sized inputs (model selection,
+    learning curves), not the serving path.
+    """
+    return _staged_scan(codes, pf.feat, pf.thr, pf.leaf, pf.out_col,
+                        pf.base, pf.lr, depth=pf.depth,
+                        trees_per_round=pf.trees_per_round,
+                        mode=H.resolve_kernel_mode(mode))
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "trees_per_round",
+                                             "mode", "loss_name"))
+def _staged_eval_scan(codes, Y, feat, thr, leaf, out_col, base, lr, *,
+                      depth: int, trees_per_round: int, mode: str,
+                      loss_name: str):
+    from repro.core import losses as L
+    loss = L.get_loss(loss_name)
+    n, d = codes.shape[0], base.shape[0]
+    n_rounds = feat.shape[0] // trees_per_round
+
+    def per_round(F, xs):
+        f, th, v, col = xs
+        F = forest_apply(F, codes, f, th, v, col, lr, depth=depth, mode=mode)
+        return F, loss.value(F, Y).astype(jnp.float32)
+
+    def group(x):
+        return x.reshape((n_rounds, trees_per_round) + x.shape[1:])
+
+    F0 = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
+    _, vloss = jax.lax.scan(per_round, F0, (group(feat), group(thr),
+                                            group(leaf), group(out_col)))
+    return vloss
+
+
+def staged_eval(pf: PackedForest, codes: jax.Array, Y: jax.Array,
+                loss_name: str, *, mode="jnp") -> jax.Array:
+    """Per-round validation losses ``(n_rounds,)`` without materialising the
+    staged score tensor — argmin gives ``best_iteration`` in one dispatch."""
+    return _staged_eval_scan(codes, Y, pf.feat, pf.thr, pf.leaf, pf.out_col,
+                             pf.base, pf.lr, depth=pf.depth,
+                             trees_per_round=pf.trees_per_round,
+                             mode=H.resolve_kernel_mode(mode),
+                             loss_name=loss_name)

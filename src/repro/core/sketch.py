@@ -1,5 +1,12 @@
 """Sketched split scoring — the paper's core contribution (Section 3 + Appendix A).
 
+The split search scores candidate partitions with eq. (4),
+``S(R) = ||sum_{i in R} g_i||^2 / (|R| + lambda)``, whose cost scales with the
+width of the gradient matrix.  Each sketch replaces the ``(n, d)`` gradients
+``G`` with a ``(n, k)`` surrogate ``G_k`` for the *search only* — leaf values
+(eq. (3)) always use the full gradients, which is why packed leaf blocks stay
+width ``d`` while the split statistics are width ``k`` (see `core.forest`).
+
 All four sketches are expressed as a column operator ``G_k = G @ Pi`` so that on a
 ``(pod, data, model)`` mesh with ``G`` sharded (rows -> data, outputs -> model) the
 sketch is a *local matmul + psum over the model axis*.  This is the TPU-native form:
@@ -8,11 +15,29 @@ leaving a small replicated ``(n_local, k)`` matrix for the split search.
 
 Methods
 -------
-``top_outputs``        deterministic top-k column norms          (Sec. 3.1)
-``random_sampling``    importance sampling, 1/sqrt(k p_i) scale  (Sec. 3.2)
-``random_projection``  JL Gaussian projection N(0, 1/k)          (Sec. 3.3)
-``truncated_svd``      top-k right singular subspace             (App. A.1)
-``none``               identity (SketchBoost Full baseline)
+=====================  ===========  ==============================  ===========
+``sketch_method``      Paper        Operator ``Pi`` (d, k)          Extra cost
+=====================  ===========  ==============================  ===========
+``top_outputs``        Sec. 3.1     one-hot of top-k column norms   O(n d)
+                                    (`top_outputs_selector`)
+``random_sampling``    Sec. 3.2     importance-sampled one-hot,     O(n d)
+                                    scaled 1/sqrt(k p_i) for
+                                    unbiasedness
+                                    (`random_sampling_selector`)
+``random_projection``  Sec. 3.3     JL Gaussian, i.i.d. N(0, 1/k)   O(n d k)
+                                    — the paper's recommended
+                                    default
+                                    (`random_projection_matrix`)
+``truncated_svd``      App. A.1     top-k right singular subspace   O(n d^2
+                                    via the d x d Gram eigh          + d^3)
+                                    (`truncated_svd_projector`)
+``none``               —            identity: SketchBoost Full      0
+                                    baseline (also when k >= d)
+=====================  ===========  ==============================  ===========
+
+Entry points: `build_sketch` (single device) and `sketch_sharded` (inside
+shard_map); both are consumed by `boosting._boost_round`, which concatenates
+the sketch with the SGB/GOSS weight channel into the split statistics.
 """
 from __future__ import annotations
 

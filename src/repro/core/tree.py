@@ -125,7 +125,14 @@ def predict_tree(tree: Tree, codes: jax.Array) -> jax.Array:
 
 
 class Forest(NamedTuple):
-    """Stacked ensemble of T trees (all arrays carry a leading T axis)."""
+    """Stacked ensemble of T trees (all arrays carry a leading T axis).
+
+    This is the *training-side* container (what the scan loop stacks).  For
+    inference, `core.forest.pack_forest` converts it into a `PackedForest`
+    whose compiled traversal paths — including the Pallas kernel — replace
+    the per-tree walk below; `predict_forest` is retained as the
+    bit-parity reference those paths are tested against.
+    """
     feat: jax.Array     # (T, 2^D - 1)
     thr: jax.Array      # (T, 2^D - 1)
     value: jax.Array    # (T, 2^D, d)

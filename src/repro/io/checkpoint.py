@@ -158,3 +158,56 @@ class CheckpointManager:
         with open(os.path.join(self.root, f"step_{step}",
                                "manifest.json")) as f:
             return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# GBDT serving checkpoints: PackedForest (+ quantizer) in one self-describing
+# step — the train -> checkpoint -> serve handoff (`training/serve_lib.py`).
+# ---------------------------------------------------------------------------
+
+def save_forest_checkpoint(root: str, packed, quantizer=None, *,
+                           step: int = 0, metadata: Optional[Dict] = None,
+                           keep_n: int = 3) -> None:
+    """Checkpoint a `core.forest.PackedForest` (and its quantizer) for serving.
+
+    The forest is a flat pytree of arrays, so it rides the standard atomic
+    `CheckpointManager` format; the manifest records enough structure
+    (``kind``/``fields``/``has_quantizer``) for `load_forest_checkpoint` to
+    rebuild without the caller supplying a template tree.  ``metadata``
+    should carry the loss name (serving uses it to pick the probability
+    transform) plus anything else the operator wants pinned to the model.
+    """
+    tree: Dict[str, Any] = {"forest": packed._asdict()}
+    if quantizer is not None:
+        tree["quantizer"] = {"edges": quantizer.edges,
+                             "n_bins": np.int32(quantizer.n_bins)}
+    meta = dict(metadata or {})
+    meta.update(kind="packed_forest", fields=list(packed._fields),
+                has_quantizer=quantizer is not None)
+    mgr = CheckpointManager(root, keep_n=keep_n, async_save=False)
+    mgr.save(step, tree, metadata=meta)
+
+
+def load_forest_checkpoint(root: str, step: Optional[int] = None):
+    """Load a serving checkpoint: ``(PackedForest, Quantizer | None, meta)``."""
+    from repro.core.forest import PackedForest
+    from repro.core.quantize import Quantizer
+
+    mgr = CheckpointManager(root, async_save=False)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    meta = mgr.manifest(step).get("metadata", {})
+    if meta.get("kind") != "packed_forest":
+        raise ValueError(f"checkpoint step_{step} under {root} is not a "
+                         f"packed_forest (kind={meta.get('kind')!r})")
+    like: Dict[str, Any] = {"forest": {f: 0 for f in meta["fields"]}}
+    if meta.get("has_quantizer"):
+        like["quantizer"] = {"edges": 0, "n_bins": 0}
+    tree, _ = mgr.restore(like, step)
+    packed = PackedForest(**tree["forest"])
+    quantizer = None
+    if meta.get("has_quantizer"):
+        quantizer = Quantizer(edges=tree["quantizer"]["edges"],
+                              n_bins=int(tree["quantizer"]["n_bins"]))
+    return packed, quantizer, meta

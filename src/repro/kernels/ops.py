@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hist_kernel import histogram_pallas
+from repro.kernels.predict_kernel import forest_traverse_pallas
 from repro.kernels.split_kernel import split_scan_pallas
 
 
@@ -133,6 +134,43 @@ def histogram_splits(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
     return gain[:, 0], idx[:, 0]
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("depth", "row_tile", "lane_pad",
+                                    "interpret"),
+                   donate_argnums=(0,))
+def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
+                 thr: jax.Array, leaf: jax.Array, out_col: jax.Array,
+                 lr, *, depth: int, row_tile: int = 256,
+                 lane_pad: int | None = None,
+                 interpret: bool = True) -> jax.Array:
+    """Packed-forest traversal: ``F_init + lr * sum_t tree_t(codes)``.
+
+    Pads rows to ``row_tile`` and the feature / leaf-width / output axes to
+    ``lane_pad`` lanes, runs the traversal kernel over the ``(row_tiles,
+    trees)`` grid, and unpads.  Padded rows route somewhere harmless and are
+    sliced off; padded leaf columns are zero and the in-kernel placement
+    matrix never scatters them.  Semantics contract: `ref.forest_apply_ref`.
+    """
+    n, m = codes.shape
+    d = F_init.shape[1]
+    w = leaf.shape[2]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    codes_p = _pad_to(_pad_to(codes.astype(jnp.int32), row_tile, axis=0),
+                      lane_pad, axis=1)
+    F_p = _pad_to(_pad_to(F_init.astype(jnp.float32), row_tile, axis=0),
+                  lane_pad, axis=1)
+    feat_p = _pad_to(feat.astype(jnp.int32), lane_pad, axis=1)
+    thr_p = _pad_to(thr.astype(jnp.int32), lane_pad, axis=1)
+    leaf_p = _pad_to(_pad_to(leaf.astype(jnp.float32), lane_pad, axis=1),
+                     lane_pad, axis=2)
+    params = jnp.asarray([[lr]], jnp.float32)
+    out = forest_traverse_pallas(params, out_col.astype(jnp.int32)[:, None],
+                                 F_p, codes_p, feat_p, thr_p, leaf_p,
+                                 depth=depth, leaf_width=w,
+                                 row_tile=row_tile, interpret=interpret)
+    return out[:n, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -169,5 +207,6 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # Re-export the oracles for convenience.
 histogram_ref = ref.histogram_ref
 split_scan_ref = ref.split_scan_ref
+forest_apply_ref = ref.forest_apply_ref
 mha_ref = ref.mha_ref
 decode_attention_ref = ref.decode_attention_ref

@@ -61,6 +61,49 @@ def split_scan_ref(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
     return best, idx
 
 
+@functools.partial(jax.jit, static_argnames=("depth",), donate_argnums=(0,))
+def forest_apply_ref(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
+                     thr: jax.Array, leaf: jax.Array, out_col: jax.Array,
+                     lr: jax.Array, *, depth: int) -> jax.Array:
+    """Oracle for the packed-forest traversal kernel (gather-based walk).
+
+    Args:
+      F_init:  (n, d) float32 initial scores (donated; accumulated per tree).
+      codes:   (n, m) binned features.
+      feat, thr: (T, 2^depth - 1) int32 heap split features / thresholds
+                 (go left when ``code <= thr``).
+      leaf:    (T, 2^depth, w) float32 leaf blocks.
+      out_col: (T,) int32 starting output column of each tree's leaf block
+               (0 for full-width trees, the output index for one-vs-all).
+    Returns:
+      (n, d) float32 ``F_init + lr * sum_t tree_t(codes)``, accumulated
+      tree-by-tree in scan order — bit-identical to `tree.predict_forest`
+      for full-width trees and to the Pallas kernel's grid order.
+    """
+    n = codes.shape[0]
+    w = leaf.shape[2]
+
+    def body(acc, tree_arrays):
+        f, th, v, col = tree_arrays
+        pos = jnp.zeros((n,), jnp.int32)
+        for lvl in range(depth):
+            heap = pos + (2 ** lvl - 1)
+            fi = f[heap]
+            code = codes[jnp.arange(n), fi].astype(jnp.int32)
+            pos = pos * 2 + (code > th[heap]).astype(jnp.int32)
+        contrib = lr * v[pos]                              # (n, w)
+        if w == acc.shape[1]:          # full-width leaf block: col is 0
+            acc = acc + contrib
+        else:                          # narrow block at a traced column
+            cur = jax.lax.dynamic_slice(acc, (0, col), (n, w))
+            acc = jax.lax.dynamic_update_slice(acc, cur + contrib, (0, col))
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, F_init.astype(jnp.float32),
+                          (feat, thr, leaf, out_col.astype(jnp.int32)))
+    return acc
+
+
 def _attn_mask(sq: int, sk: int, *, causal: bool, window: int | None,
                q_offset: int) -> jax.Array:
     """(sq, sk) boolean attention mask. q position i attends kv position j iff

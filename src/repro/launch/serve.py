@@ -1,55 +1,99 @@
-"""Serving launcher: batched generation driver (decode shapes' runtime path).
+"""GBDT serving launcher: checkpointed PackedForest -> batched request driver.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --requests 8
+Loads a serving checkpoint written by `io.checkpoint.save_forest_checkpoint`
+(or trains + checkpoints a synthetic demo model with ``--demo``), stands up a
+`training.serve_lib.ForestServer`, and drives a simulated request stream
+through it in micro-batched windows, reporting latency percentiles and
+throughput — the smoke-level stand-in for a real RPC front end.
+
+  PYTHONPATH=src python -m repro.launch.serve --demo --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --ckpt /ckpts/otto --requests 256
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
+import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, smoke_config
-from repro.launch.mesh import host_device_mesh
-from repro.models import lm
-from repro.training.serve_lib import BatchedServer, ServeConfig
+
+def _train_demo(ckpt_dir: str, seed: int):
+    """Train a small synthetic multiclass model and checkpoint it."""
+    from repro.core.boosting import GBDTConfig, SketchBoost
+    from repro.data.pipeline import make_tabular
+    from repro.io.checkpoint import save_forest_checkpoint
+
+    X, y = make_tabular("multiclass", 4000, 20, 6, seed=seed)
+    cfg = GBDTConfig(loss="multiclass", sketch_method="random_projection",
+                     sketch_k=3, n_trees=40, depth=5, learning_rate=0.1,
+                     seed=seed)
+    t0 = time.perf_counter()
+    model = SketchBoost(cfg).fit(X, y)
+    print(f"[serve] demo model trained in {time.perf_counter() - t0:.1f}s "
+          f"({model.packed.n_trees} trees, depth {model.packed.depth})")
+    save_forest_checkpoint(ckpt_dir, model.packed, model.quantizer,
+                           metadata={"loss": cfg.loss,
+                                     "n_features": X.shape[1]})
+    print(f"[serve] checkpoint written to {ckpt_dir}")
+    return X.shape[1]
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new-tokens", type=int, default=32)
-    ap.add_argument("--max-seq-len", type=int, default=256)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_serve_gbdt",
+                    help="serving checkpoint directory")
+    ap.add_argument("--demo", action="store_true",
+                    help="train + checkpoint a synthetic model first")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rows", type=int, default=32,
+                    help="rows per request (feature blocks)")
+    ap.add_argument("--window", type=int, default=8,
+                    help="requests micro-batched per forest pass")
+    ap.add_argument("--features", type=int, default=0,
+                    help="request feature count (default: from metadata)")
+    ap.add_argument("--max-batch", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch) if args.full_config else smoke_config(args.arch)
-    if cfg.embed_inputs:
-        ap.error(f"{args.arch} takes embedding inputs; use the dry-run for "
-                 "its decode shapes")
-    params = lm.init(cfg, jax.random.key(args.seed))
-    scfg = ServeConfig(max_seq_len=args.max_seq_len,
-                       temperature=args.temperature)
-    server = BatchedServer(cfg, scfg, params, args.batch, seed=args.seed)
+    if args.demo:
+        _train_demo(args.ckpt, args.seed)
 
-    import numpy as np
+    from repro.training.serve_lib import ForestServer
+    server = ForestServer.from_checkpoint(args.ckpt,
+                                          max_batch=args.max_batch)
+    if server.quantizer is None:
+        ap.error(f"checkpoint {args.ckpt} has no quantizer; this driver "
+                 "sends raw float features (re-save with the quantizer, or "
+                 "serve pre-binned codes via ForestServer.predict_codes)")
+    meta_m = args.features or server.quantizer.edges.shape[0]
+    print(f"[serve] loaded forest: {server.packed.n_trees} trees, "
+          f"depth {server.packed.depth}, d={server.packed.n_outputs}, "
+          f"kernel mode {server.mode!r}")
+
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(2, cfg.vocab_size,
-                            size=args.prompt_len).tolist()
-               for _ in range(args.requests)]
+    requests = [rng.normal(size=(args.rows, meta_m)).astype(np.float32)
+                for _ in range(args.requests)]
+    # Warm the compile cache on one window, then zero the counters so the
+    # reported throughput is steady-state only.
+    server.serve(requests[:args.window])
+    server.reset_stats()
+
+    lat = []
     t0 = time.perf_counter()
-    outs = server.generate(prompts, max_new_tokens=args.max_new_tokens)
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(o) for o in outs)
-    print(f"[serve] {args.requests} requests, {n_tok} tokens in {dt:.1f}s "
-          f"({n_tok/dt:.1f} tok/s)")
-    for i, o in enumerate(outs[:4]):
-        print(f"  req{i}: {o[:16]}{'...' if len(o) > 16 else ''}")
+    for ofs in range(0, len(requests), args.window):
+        w0 = time.perf_counter()
+        outs = server.serve(requests[ofs:ofs + args.window])
+        lat.extend([(time.perf_counter() - w0) * 1e3] * len(outs))
+    wall = time.perf_counter() - t0
+
+    lat = np.asarray(lat)
+    n_rows = args.requests * args.rows
+    print(f"[serve] {args.requests} requests x {args.rows} rows in "
+          f"{wall:.2f}s  ({n_rows / wall:,.0f} rows/s end-to-end, "
+          f"{server.throughput():,.0f} rows/s in-predict)")
+    print(f"[serve] latency/request: p50 {np.percentile(lat, 50):.2f}ms  "
+          f"p99 {np.percentile(lat, 99):.2f}ms  "
+          f"(window={args.window}, max_batch={args.max_batch})")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,26 @@
-"""Serving: jitted decode step with sampling + a batched continuous-batching
-request loop (the inference-side driver for decode_32k / long_500k shapes)."""
+"""Serving.
+
+Two serving stacks share this module:
+
+* **GBDT forest serving** (`ForestServer`) — the production path for the
+  SketchBoost side of the repo: load a checkpointed `core.forest.PackedForest`
+  (+ quantizer), micro-batch incoming requests into padded power-of-two
+  buckets (bounded compile cache), and score them through the compiled
+  packed-forest engine / Pallas traversal kernel.  See docs/inference.md.
+* **LM decode serving** (`BatchedServer`) — jitted decode step with sampling
+  plus a continuous-batching loop, the inference-side driver for the LM
+  dry-run world's decode shapes.
+"""
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.models import lm
@@ -15,6 +28,131 @@ from repro.models.config import ModelConfig
 from repro.training.train_lib import make_axis_ctx
 
 Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# GBDT forest serving.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ForestServeConfig:
+    """Knobs for `ForestServer`.
+
+    ``max_batch`` caps the padded micro-batch: requests up to this size are
+    padded to the next power of two (so at most ``log2(max_batch)`` compiled
+    shapes ever exist); anything larger streams through the chunked predict
+    in ``min(row_chunk, max_batch)`` slices — one more fixed shape, never a
+    per-batch-size compile.
+    """
+    loss: str = "multiclass"             # picks the predict_proba transform
+    max_batch: int = 4096
+    row_chunk: int = 65536
+    use_kernel: Any = True               # same resolution as training
+
+
+class ForestServer:
+    """Batched GBDT inference over a `PackedForest`.
+
+    >>> server = ForestServer.from_checkpoint("/ckpts/otto")
+    >>> proba = server.predict(X)                   # raw features in
+    >>> outs = server.serve([req1, req2, req3])     # micro-batched requests
+    """
+
+    def __init__(self, packed, quantizer=None,
+                 cfg: ForestServeConfig = ForestServeConfig()):
+        from repro.core.histogram import resolve_kernel_mode
+        self.packed = packed
+        self.quantizer = quantizer
+        self.cfg = cfg
+        self.mode = resolve_kernel_mode(cfg.use_kernel)
+        self.stats: Dict[str, Any] = {"requests": 0, "rows": 0, "batches": 0,
+                                      "predict_time_s": 0.0}
+
+    @classmethod
+    def from_checkpoint(cls, root: str, step: Optional[int] = None,
+                        **overrides) -> "ForestServer":
+        """Build a server from a `save_forest_checkpoint` directory; the
+        checkpoint metadata supplies the loss/transform unless overridden."""
+        from repro.io.checkpoint import load_forest_checkpoint
+        packed, quantizer, meta = load_forest_checkpoint(root, step)
+        if "loss" in meta:
+            overrides.setdefault("loss", meta["loss"])
+        return cls(packed, quantizer, ForestServeConfig(**overrides))
+
+    # -- scoring ------------------------------------------------------------
+    def _codes(self, X) -> jax.Array:
+        from repro.core.quantize import apply_quantizer
+        X = jnp.asarray(np.asarray(X, np.float32))
+        if X.ndim == 1:
+            X = X[None]
+        if self.quantizer is None:
+            raise ValueError("server has no quantizer; pass raw bin codes "
+                             "via predict_codes or checkpoint the quantizer")
+        return apply_quantizer(self.quantizer, X)
+
+    def predict_codes(self, codes: jax.Array) -> jax.Array:
+        """Raw scores for pre-binned codes (the no-quantizer entry)."""
+        from repro.core import forest as FO
+        n = codes.shape[0]
+        t0 = time.perf_counter()
+        if n > self.cfg.max_batch:
+            # Chunk size is clamped to max_batch so the streaming path adds
+            # at most ONE dispatch shape to the bounded pow-2 bucket set —
+            # arbitrary batch sizes never compile per-size executables.
+            out = FO.predict_raw(self.packed, codes, mode=self.mode,
+                                 row_chunk=min(self.cfg.row_chunk,
+                                               self.cfg.max_batch))
+        else:
+            bucket = max(8, 1 << (max(n, 1) - 1).bit_length())
+            padded = jnp.pad(codes, ((0, bucket - n), (0, 0)))
+            out = FO.predict_raw(self.packed, padded, mode=self.mode)[:n]
+        out = jax.block_until_ready(out)
+        self.stats["rows"] += int(n)
+        self.stats["batches"] += 1
+        self.stats["predict_time_s"] += time.perf_counter() - t0
+        return out
+
+    def predict_raw(self, X) -> jax.Array:
+        return self.predict_codes(self._codes(X))
+
+    def predict(self, X) -> jax.Array:
+        """Transformed outputs (probabilities for classification losses)."""
+        from repro.core.losses import get_loss
+        return get_loss(self.cfg.loss).transform(self.predict_raw(X))
+
+    def serve(self, requests: Sequence) -> List[np.ndarray]:
+        """Micro-batch a list of row-block requests through ONE forest pass.
+
+        Requests are (rows_i, m) feature blocks; they are concatenated,
+        scored as a single padded batch, and split back per request —
+        the GBDT analogue of continuous batching.
+        """
+        if not requests:
+            return []
+        blocks = [np.atleast_2d(np.asarray(r, np.float32)) for r in requests]
+        sizes = [b.shape[0] for b in blocks]
+        out = self.predict(np.concatenate(blocks, axis=0))
+        self.stats["requests"] += len(requests)
+        outs, ofs = [], 0
+        for s in sizes:
+            outs.append(np.asarray(out[ofs:ofs + s]))
+            ofs += s
+        return outs
+
+    def throughput(self) -> float:
+        """Rows/sec over everything served so far."""
+        t = self.stats["predict_time_s"]
+        return self.stats["rows"] / t if t > 0 else 0.0
+
+    def reset_stats(self) -> None:
+        """Zero the counters (e.g. after a compile-cache warmup pass)."""
+        self.stats = {"requests": 0, "rows": 0, "batches": 0,
+                      "predict_time_s": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving (the dry-run world's inference driver).
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)

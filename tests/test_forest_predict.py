@@ -1,0 +1,240 @@
+"""Packed-forest inference engine: kernel parity, pack/unpack, checkpointing,
+staged/sliced prediction, and the serving path."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forest as FO
+from repro.core import tree as T
+from repro.core.boosting import GBDTConfig, SketchBoost
+from repro.data.pipeline import make_tabular
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# Traversal kernel vs gather-based oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+def _random_packed_problem(seed, n, m, depth, n_trees, w, d):
+    rng = np.random.default_rng(seed)
+    H = 2 ** depth - 1
+    L = 2 ** depth
+    codes = jnp.asarray(rng.integers(0, 16, (n, m)), jnp.uint8)
+    feat = jnp.asarray(rng.integers(0, m, (n_trees, H)), jnp.int32)
+    thr = jnp.asarray(rng.integers(0, 16, (n_trees, H)), jnp.int32)
+    leaf = jnp.asarray(rng.normal(size=(n_trees, L, w)).astype(np.float32))
+    out_col = jnp.asarray(rng.integers(0, d - w + 1, (n_trees,)), jnp.int32)
+    F0 = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return codes, feat, thr, leaf, out_col, F0
+
+
+@pytest.mark.parametrize("n,m,depth,n_trees,w,d", [
+    (64, 4, 1, 1, 3, 3),        # single depth-1 tree, full width
+    (128, 6, 3, 5, 4, 4),       # full-width leaves (single_tree shape)
+    (200, 5, 3, 6, 1, 4),       # width-1 leaves + out_col (one_vs_all shape)
+    (70, 3, 4, 2, 2, 6),        # block narrower than d, non-multiple rows
+])
+def test_traversal_kernel_matches_ref(n, m, depth, n_trees, w, d):
+    codes, feat, thr, leaf, out_col, F0 = _random_packed_problem(
+        n + m + depth, n, m, depth, n_trees, w, d)
+    r = ref.forest_apply_ref(F0.copy(), codes, feat, thr, leaf, out_col,
+                             jnp.float32(0.1), depth=depth)
+    k = ops.forest_apply(F0.copy(), codes, feat, thr, leaf, out_col, 0.1,
+                         depth=depth, row_tile=32, interpret=True)
+    # Every kernel contraction is an exact 0/1 selection: bit parity.
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_traversal_ref_matches_tree_walk():
+    """The oracle's heap walk == tree.tree_leaf_index routing."""
+    codes, feat, thr, leaf, out_col, F0 = _random_packed_problem(
+        0, 96, 5, 3, 4, 3, 3)
+    out = ref.forest_apply_ref(jnp.zeros_like(F0), codes, feat, thr, leaf,
+                               out_col * 0, jnp.float32(1.0), depth=3)
+    expect = np.zeros(F0.shape, np.float32)
+    for t in range(4):
+        pos = np.asarray(T.tree_leaf_index(feat[t], thr[t], codes, depth=3))
+        expect += np.asarray(leaf)[t][pos]
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PackedForest == predict_forest parity (all sketch methods x depths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["none", "top_outputs", "random_sampling",
+                                    "random_projection", "truncated_svd"])
+@pytest.mark.parametrize("depth", [2, 4])
+def test_packed_predict_bit_parity(method, depth):
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=11)
+    cfg = GBDTConfig(loss="multiclass", n_trees=6, depth=depth,
+                     learning_rate=0.25, sketch_method=method, sketch_k=2)
+    m = SketchBoost(cfg).fit(X, y)
+    codes = m._bin(X)
+    legacy = np.asarray(T.predict_forest(m.forest, codes, cfg.learning_rate,
+                                         m.base_score))
+    packed = np.asarray(FO.predict_raw(m.packed, codes, mode="jnp"))
+    np.testing.assert_array_equal(packed, legacy)      # bit parity
+    chunked = np.asarray(FO.predict_raw(m.packed, codes, mode="jnp",
+                                        row_chunk=41))
+    np.testing.assert_array_equal(chunked, legacy)     # tail-padded chunks
+
+
+def test_packed_predict_one_vs_all_parity():
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=12)
+    cfg = GBDTConfig(loss="multiclass", strategy="one_vs_all", n_trees=5,
+                     depth=3, learning_rate=0.3)
+    m = SketchBoost(cfg).fit(X, y)
+    codes = m._bin(X)
+
+    # The pre-packing formula: per-output forests, re-vmapped.
+    def per_output(f, t, v, base_j):
+        forest = T.Forest(feat=f, thr=t, value=v)
+        return T.predict_forest(forest, codes, cfg.learning_rate,
+                                base_j[None])[:, 0]
+    legacy = np.asarray(jax.vmap(per_output, in_axes=(1, 1, 1, 0),
+                                 out_axes=1)(m.forest.feat, m.forest.thr,
+                                             m.forest.value, m.base_score))
+    packed = np.asarray(m.predict_raw(X))
+    np.testing.assert_array_equal(packed, legacy)
+
+
+def test_packed_predict_interpret_kernel_e2e():
+    """The Pallas traversal kernel (interpret) is bit-identical to jnp."""
+    X, y = make_tabular("multiclass", 200, 5, 3, seed=13)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                     learning_rate=0.3, sketch_method="none")
+    m = SketchBoost(cfg).fit(X, y)
+    codes = m._bin(X)
+    jnp_out = np.asarray(FO.predict_raw(m.packed, codes, mode="jnp"))
+    ker_out = np.asarray(FO.predict_raw(m.packed, codes, mode="interpret"))
+    np.testing.assert_array_equal(ker_out, jnp_out)
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack structure
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip():
+    X, y = make_tabular("multiclass", 250, 5, 3, seed=14)
+    for strategy in ("single_tree", "one_vs_all"):
+        cfg = GBDTConfig(loss="multiclass", strategy=strategy, n_trees=4,
+                         depth=3, learning_rate=0.3)
+        m = SketchBoost(cfg).fit(X, y)
+        forest2, strat2 = FO.unpack_forest(m.packed)
+        assert strat2 == strategy
+        np.testing.assert_array_equal(np.asarray(forest2.feat),
+                                      np.asarray(m.forest.feat))
+        np.testing.assert_array_equal(np.asarray(forest2.thr),
+                                      np.asarray(m.forest.thr))
+        np.testing.assert_allclose(np.asarray(forest2.value),
+                                   np.asarray(m.forest.value))
+
+
+def test_packed_child_pointers_are_heap():
+    X, y = make_tabular("multiclass", 200, 5, 3, seed=15)
+    m = SketchBoost(GBDTConfig(loss="multiclass", n_trees=2, depth=3,
+                               learning_rate=0.3)).fit(X, y)
+    pf = m.packed
+    H = 2 ** pf.depth - 1
+    idx = np.arange(H)
+    for t in range(pf.n_trees):
+        np.testing.assert_array_equal(np.asarray(pf.left)[t], 2 * idx + 1)
+        np.testing.assert_array_equal(np.asarray(pf.right)[t], 2 * idx + 2)
+    # Leaves in global numbering start right after the internal nodes.
+    assert int(np.asarray(pf.left)[0, -1]) == H + pf.n_leaves - 2
+
+
+# ---------------------------------------------------------------------------
+# best_iteration slicing + staged prediction
+# ---------------------------------------------------------------------------
+
+def test_slice_rounds_equals_staged():
+    X, y = make_tabular("multiclass", 250, 6, 4, seed=16)
+    for strategy in ("single_tree", "one_vs_all"):
+        cfg = GBDTConfig(loss="multiclass", strategy=strategy, n_trees=5,
+                         depth=3, learning_rate=0.2)
+        m = SketchBoost(cfg).fit(X, y)
+        codes = m._bin(X)
+        staged = np.asarray(FO.predict_staged(m.packed, codes))
+        assert staged.shape[0] == m.packed.n_rounds == 5
+        for r in (1, 3, 5):
+            sliced = np.asarray(FO.predict_raw(FO.slice_rounds(m.packed, r),
+                                               codes))
+            np.testing.assert_array_equal(staged[r - 1], sliced)
+        # model API: iteration arg == slice; full == default
+        np.testing.assert_array_equal(np.asarray(m.predict_raw(X, 3)),
+                                      staged[2])
+        np.testing.assert_array_equal(np.asarray(m.predict_raw(X)),
+                                      staged[-1])
+
+
+def test_staged_eval_matches_history():
+    """staged_eval replays the training loop's validation trajectory."""
+    X, y = make_tabular("multiclass", 400, 6, 3, seed=17)
+    Xv, yv = X[:100], y[:100]
+    cfg = GBDTConfig(loss="multiclass", n_trees=8, depth=3,
+                     learning_rate=0.3, sketch_method="none")
+    m = SketchBoost(cfg).fit(X[100:], y[100:], eval_set=(Xv, yv))
+    vloss = np.asarray(FO.staged_eval(m.packed, m._bin(Xv),
+                                      m._targets(yv, 3), "multiclass"))
+    hist = [r["valid_loss"] for r in m.history if "valid_loss" in r]
+    np.testing.assert_allclose(vloss, np.asarray(hist, np.float32),
+                               rtol=1e-5, atol=1e-6)
+    assert m.best_iteration == int(vloss.argmin()) + 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip + serving
+# ---------------------------------------------------------------------------
+
+def test_forest_checkpoint_roundtrip(tmp_path):
+    from repro.io.checkpoint import (load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    X, y = make_tabular("multiclass", 250, 6, 4, seed=18)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                     learning_rate=0.3, sketch_k=2)
+    m = SketchBoost(cfg).fit(X, y)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    pf, q, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["loss"] == "multiclass" and meta["kind"] == "packed_forest"
+    for a, b in zip(pf, m.packed):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert q.n_bins == m.quantizer.n_bins
+    np.testing.assert_array_equal(np.asarray(q.edges),
+                                  np.asarray(m.quantizer.edges))
+    restored = np.asarray(FO.predict_raw(pf, m._bin(X), mode="jnp"))
+    np.testing.assert_array_equal(restored, np.asarray(m.predict_raw(X)))
+
+
+def test_forest_server_serves_batches(tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=19)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                     learning_rate=0.3)
+    m = SketchBoost(cfg).fit(X, y)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path))
+
+    rng = np.random.default_rng(0)
+    requests = [X[rng.integers(0, len(X), size=s)] for s in (1, 7, 32, 5)]
+    outs = server.serve(requests)
+    assert [o.shape[0] for o in outs] == [1, 7, 32, 5]
+    expect = np.asarray(m.predict(np.concatenate(requests, axis=0)))
+    np.testing.assert_array_equal(np.concatenate(outs, axis=0), expect)
+    assert server.stats["requests"] == 4 and server.stats["rows"] == 45
+    assert server.throughput() > 0
+    server.reset_stats()
+    assert server.stats["rows"] == 0
+    # Batches above max_batch stream in max_batch-clamped chunks (bounded
+    # compile cache) and still match the in-memory model bit for bit.
+    from repro.training.serve_lib import ForestServeConfig
+    small = ForestServer(m.packed, m.quantizer,
+                         ForestServeConfig(loss="multiclass", max_batch=64))
+    big = np.asarray(small.predict(X))
+    np.testing.assert_array_equal(big, np.asarray(m.predict(X)))
