@@ -11,6 +11,7 @@ vs one-vs-all, time vs d) are the reproduction targets.
   fig3     learning curves full vs sketch                 (paper Fig. 3)
   rounds   boosting rounds to convergence                 (paper Table 13)
   predict  packed-forest inference baseline               (-> BENCH_predict.json)
+  shap     TreeSHAP explanation-serving baseline          (-> BENCH_shap.json)
   kernels  Pallas kernel vs jnp oracle timings (CPU interpret; structural)
   compression  sketched vs exact DP all-reduce bytes      (beyond-paper)
 
@@ -305,6 +306,117 @@ def bench_predict(scale) -> List[Dict]:
     return rows
 
 
+SHAP_QUICK = dict(n=3000, m=16, d=6, trees=30, depth=4, bins=32, n_expl=512)
+SHAP_FULL = dict(n=20000, m=40, d=16, trees=100, depth=6, bins=256,
+                 n_expl=4096)
+SHAP_SMOKE = dict(n=500, m=8, d=4, trees=8, depth=3, bins=16, n_expl=128)
+
+
+def bench_shap(scale) -> List[Dict]:
+    """Explanation-serving baseline: packed path-walk TreeSHAP vs the
+    per-tree python walk.
+
+    For models trained at ``sketch_k in {2, 5, full}``, times SHAP values
+    for ``n_expl`` rows two ways:
+
+      * ``packed_kernel``    — `explain.shap_values` (kernel-mode dispatched
+                               vectorized path walk over the whole forest:
+                               Pallas on TPU, the jnp oracle elsewhere);
+      * ``python_per_tree``  — one `ref.tree_shap_ref` dispatch per tree,
+                               the uncompiled per-tree loop a naive port
+                               would run.
+
+    Every row also records the local-accuracy residual
+    ``max |base + phi.sum(features) - predict_raw|`` — a bench that stops
+    being exact fails loudly.  `BENCH_shap.json` at the repo root is the
+    standing baseline: diff ``rows_per_sec`` across PRs.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import explain as EX
+    from repro.core import forest as FO
+    from repro.core.boosting import GBDTConfig, SketchBoost
+    from repro.core.histogram import resolve_kernel_mode
+    from repro.data.pipeline import make_tabular
+    from repro.kernels import ref
+
+    sc = (SHAP_FULL if scale is FULL else
+          SHAP_SMOKE if scale is SMOKE else SHAP_QUICK)
+    mode = resolve_kernel_mode(True)
+    X, y = make_tabular("multiclass", sc["n"], sc["m"], sc["d"], seed=0)
+    rng = np.random.default_rng(1)
+    X_expl = X[rng.integers(0, sc["n"], size=sc["n_expl"])]
+
+    rows: List[Dict] = []
+    for k_label, method, k in ((2, "random_projection", 2),
+                               (5, "random_projection", 5),
+                               ("full", "none", 0)):
+        cfg = GBDTConfig(loss="multiclass", sketch_method=method, sketch_k=k,
+                         n_trees=sc["trees"], depth=sc["depth"],
+                         n_bins=sc["bins"], learning_rate=0.1, seed=0)
+        model = SketchBoost(cfg).fit(X, y)
+        codes = model._bin(X_expl)
+        pf = model.packed
+        pack = EX.build_path_pack(pf)
+        raw = np.asarray(FO.predict_raw(pf, codes, mode="jnp"))
+
+        def packed_kernel():
+            return EX.shap_values(pf, codes, mode=mode, pack=pack)
+
+        def python_per_tree():
+            n = codes.shape[0]
+            phi = jnp.zeros((n, sc["m"], sc["d"]), jnp.float32)
+            for i in range(pf.n_trees):
+                phi = ref.tree_shap_ref(
+                    phi, codes, pack.slot_feat[i:i + 1],
+                    pack.slot_lo[i:i + 1], pack.slot_hi[i:i + 1],
+                    pack.slot_z[i:i + 1], pf.leaf[i:i + 1],
+                    pf.out_col[i:i + 1], pf.lr, depth=pf.depth)
+            return phi, EX.expected_values(pf, pack)
+
+        for name, fn in (("packed_kernel", packed_kernel),
+                         ("python_per_tree", python_per_tree)):
+            t0 = time.perf_counter()
+            phi, base = fn()
+            phi = jax.block_until_ready(phi)
+            cold = time.perf_counter() - t0
+            warm = np.inf                   # best-of-3: robust to CPU noise
+            for _ in range(3):
+                t0 = time.perf_counter()
+                phi, base = fn()
+                phi = jax.block_until_ready(phi)
+                warm = min(warm, time.perf_counter() - t0)
+            acc_err = float(np.max(np.abs(
+                np.asarray(base) + np.asarray(phi).sum(axis=1) - raw)))
+            assert acc_err < 1e-4, f"local accuracy broke: {acc_err}"
+            rows.append({
+                "sketch_k": k_label, "path": name,
+                "n_expl": sc["n_expl"], "trees": int(pf.n_trees),
+                "depth": sc["depth"], "d": sc["d"], "m": sc["m"],
+                "cold_time_s": round(cold, 4), "warm_time_s": round(warm, 4),
+                "rows_per_sec": round(sc["n_expl"] / warm),
+                "local_acc_err": acc_err,
+            })
+            print(f"  shap k={k_label} {name}: "
+                  f"{rows[-1]['rows_per_sec']:,} rows/s "
+                  f"(warm {warm:.3f}s, |err| {acc_err:.1e})", flush=True)
+
+    payload = {
+        "bench": "forest_shap",
+        "backend": jax.default_backend(),
+        "kernel_mode": mode,
+        "scale": sc,
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_shap.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:shap] wrote {os.path.join(root, 'BENCH_shap.json')}",
+          flush=True)
+    return rows
+
+
 def bench_kernels() -> List[Dict]:
     """Pallas (interpret) vs jnp oracle — correctness + structural cost.
     Wall-clock on CPU interpret mode is NOT the TPU number; report analytic
@@ -377,6 +489,7 @@ def bench_compression() -> List[Dict]:
 BENCHES = {
     "gbdt": lambda sc: bench_gbdt(sc),
     "predict": lambda sc: bench_predict(sc),
+    "shap": lambda sc: bench_shap(sc),
     "table1": lambda sc: bench_table1(sc),
     "fig1": lambda sc: bench_fig1(sc),
     "fig3": lambda sc: bench_fig3(sc),

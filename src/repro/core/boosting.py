@@ -239,6 +239,7 @@ class SketchBoost:
         self.base_score: Optional[jax.Array] = None
         self.history: List[Dict[str, Any]] = []
         self.best_round: int = -1
+        self._path_pack: Any = None     # full-forest PathPack, built lazily
 
     # -- data prep ----------------------------------------------------------
     def _bin(self, X) -> jax.Array:
@@ -307,6 +308,7 @@ class SketchBoost:
         self.packed = FO.pack_forest(self.forest, self.base_score,
                                      cfg.learning_rate,
                                      strategy=cfg.strategy)
+        self._path_pack = None              # path slots belong to old forest
         return self
 
     def _fit_scan(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
@@ -317,7 +319,7 @@ class SketchBoost:
         chunk = cfg.scan_chunk if cfg.scan_chunk > 0 else n_total
         chunk = max(1, min(chunk, n_total))
         best_loss, best_round = np.inf, -1
-        feat_c, thr_c, val_c = [], [], []
+        feat_c, thr_c, val_c, gain_c, cov_c = [], [], [], [], []
         done, stop = 0, False
         t0 = time.perf_counter()
         seg_start = 0.0
@@ -352,6 +354,8 @@ class SketchBoost:
             feat_c.append(trees.feat[:keep])
             thr_c.append(trees.thr[:keep])
             val_c.append(trees.value[:keep])
+            gain_c.append(trees.gain[:keep])
+            cov_c.append(trees.cover[:keep])
             done += keep
             seg_start = elapsed
             if verbose and not stop:
@@ -363,11 +367,15 @@ class SketchBoost:
         feat = jnp.concatenate(feat_c, axis=0)
         thr = jnp.concatenate(thr_c, axis=0)
         value = jnp.concatenate(val_c, axis=0)
+        gain = jnp.concatenate(gain_c, axis=0)
+        cover = jnp.concatenate(cov_c, axis=0)
         if best_round >= 0 and cfg.early_stopping_rounds:
-            feat, thr, value = (feat[:best_round + 1], thr[:best_round + 1],
-                                value[:best_round + 1])
+            keep_n = best_round + 1
+            feat, thr, value = feat[:keep_n], thr[:keep_n], value[:keep_n]
+            gain, cover = gain[:keep_n], cover[:keep_n]
         self.best_round = best_round if best_round >= 0 else feat.shape[0] - 1
-        self.forest = T.Forest(feat=feat, thr=thr, value=value)
+        self.forest = T.Forest(feat=feat, thr=thr, value=value, gain=gain,
+                               cover=cover)
 
     def _fit_python(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
                     has_eval: bool, key, verbose: bool) -> None:
@@ -427,6 +435,67 @@ class SketchBoost:
     def predict(self, X, iteration: Optional[int] = None) -> jax.Array:
         return L.get_loss(self.cfg.loss).transform(
             self.predict_raw(X, iteration))
+
+    # -- explainability (repro.explain) -------------------------------------
+    def _sliced_packed(self, iteration: Optional[int]) -> FO.PackedForest:
+        return (self.packed if iteration is None
+                else FO.slice_rounds(self.packed, iteration))
+
+    def shap_values(self, X, *, algorithm: str = "path_dependent",
+                    background=None, iteration: Optional[int] = None,
+                    check_additivity: bool = False):
+        """Per-output SHAP attributions ``(phi, base_values)``.
+
+        ``phi`` is ``(n, m, d)`` — one attribution per (row, feature, output)
+        — and ``base_values`` is ``(d,)``; local accuracy holds:
+        ``base_values + phi.sum(axis=1) == predict_raw(X)`` (to float32
+        accumulation error).  ``algorithm="path_dependent"`` is exact
+        TreeSHAP over the packed per-node covers; ``"interventional"``
+        explains against a ``background`` dataset (raw features, binned with
+        the model's quantizer).  Runs under the model's resolved
+        ``use_kernel`` mode (Pallas path-walk kernel on TPU).
+        """
+        from repro import explain as EX
+        codes = self._bin(np.asarray(X, np.float32))
+        bg = (None if background is None
+              else self._bin(np.asarray(background, np.float32)))
+        pf = self._sliced_packed(iteration)
+        if self._path_pack is None:            # host-side extraction: once
+            self._path_pack = EX.build_path_pack(self.packed)
+        pack = self._path_pack
+        if iteration is not None:              # pure prefix of the tree axis
+            t = iteration * self.packed.trees_per_round
+            pack = EX.PathPack(*(a[:t] for a in pack))
+        phi, base = EX.shap_values(
+            pf, codes, algorithm=algorithm, background=bg,
+            mode=self.cfg.use_kernel, row_chunk=self.cfg.predict_row_chunk,
+            pack=pack)
+        if check_additivity:
+            raw = self.predict_raw(X, iteration)
+            err = float(jnp.max(jnp.abs(base + phi.sum(axis=1) - raw)))
+            if err > 1e-3:
+                raise AssertionError(
+                    f"SHAP additivity violated: max |base + sum(phi) - "
+                    f"predict_raw| = {err:.2e}")
+        return phi, base
+
+    def apply(self, X, iteration: Optional[int] = None) -> jax.Array:
+        """Leaf-index embeddings: ``(n, T)`` int32 per-tree leaf positions."""
+        from repro import explain as EX
+        codes = self._bin(np.asarray(X, np.float32))
+        return EX.apply_forest(self._sliced_packed(iteration), codes)
+
+    def feature_importances(self, kind: str = "gain") -> jax.Array:
+        """Normalised per-feature importances from the packed buffers
+        (``kind`` in {"gain", "cover", "split_count"})."""
+        from repro import explain as EX
+        m = self.quantizer.edges.shape[0]
+        return EX.feature_importances(self.packed, kind=kind, n_features=m)
+
+    @property
+    def feature_importances_(self) -> jax.Array:
+        """sklearn-style alias for gain importances."""
+        return self.feature_importances("gain")
 
     def eval_loss(self, X, y) -> float:
         d = self.cfg.n_outputs

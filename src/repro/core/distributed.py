@@ -178,15 +178,20 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
 
         # Leaf pass on the full sharded gradients: psum over rows only.
         g_sum, h_sum = H.leaf_sums(node_pos, G, Hd, n_leaves=2 ** cfg.depth)
+        cover = jax.ops.segment_sum(jnp.ones((n_loc,), jnp.float32),
+                                    node_pos, num_segments=2 ** cfg.depth)
         for ax in row_axes:
             g_sum = jax.lax.psum(g_sum, ax)
             h_sum = jax.lax.psum(h_sum, ax)
+            cover = jax.lax.psum(cover, ax)
         value = -g_sum / (h_sum + lam)                    # (2^D, d_loc)
         F_new = F_l + cfg.learning_rate * value[node_pos]
-        tree = T.Tree(feat=heap_feat, thr=heap_thr, value=value, gain=heap_gain)
+        tree = T.Tree(feat=heap_feat, thr=heap_thr, value=value,
+                      gain=heap_gain, cover=cover)
         return F_new, tree
 
-    tree_specs = T.Tree(feat=P(), thr=P(), value=val_spec, gain=P())
+    tree_specs = T.Tree(feat=P(), thr=P(), value=val_spec, gain=P(),
+                        cover=P())
     step = shard_map(local_step, mesh=mesh,
                      in_specs=(f_spec, row_spec, y_spec, P()),
                      out_specs=(f_spec, tree_specs),

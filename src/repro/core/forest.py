@@ -42,6 +42,16 @@ perfect binary heap:
                                     leaf block (0 when ``w == d``).
   base        (d,) float32          constant base score.
   lr          () float32            learning rate.
+  cover       (T, 2^(D+1) - 1) f32  weighted training row counts per node in
+                                    global numbering (internal 0..2^D-2,
+                                    leaves 2^D-1..2^(D+1)-2), packed at fit
+                                    time so path-dependent TreeSHAP and
+                                    cover/split importances (`repro.explain`)
+                                    never re-scan training data.  ``None``
+                                    for forests packed from cover-less
+                                    buffers (pre-v2 checkpoints).
+  gain        (T, 2^D - 1) float32  split gains (0 on pass-through nodes);
+                                    ``None`` when unavailable.
 
 The whole structure is a flat pytree of arrays, so it checkpoints through
 `io.checkpoint.CheckpointManager` unchanged and crosses jit boundaries as
@@ -50,7 +60,7 @@ plain donatable buffers.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +78,8 @@ class PackedForest(NamedTuple):
     out_col: jax.Array   # (T,) int32
     base: jax.Array      # (d,) float32
     lr: jax.Array        # () float32
+    cover: Optional[jax.Array] = None  # (T, 2^(D+1) - 1) float32 node covers
+    gain: Optional[jax.Array] = None   # (T, 2^D - 1) float32 split gains
 
     @property
     def n_trees(self) -> int:
@@ -105,6 +117,20 @@ def _heap_children(n_trees: int, n_nodes: int) -> Tuple[jax.Array, jax.Array]:
             jnp.broadcast_to(left + 1, (n_trees, n_nodes)))
 
 
+def _heap_cover(leaf_cover: jax.Array) -> jax.Array:
+    """(T, 2^D) leaf covers -> (T, 2^(D+1) - 1) full-heap node covers.
+
+    Internal covers are the sums of their leaf descendants (levels built
+    bottom-up by pairwise folding), concatenated in global node order:
+    root first, leaves last — so ``cover[:, i]`` indexes node ``i`` directly.
+    """
+    levels = [leaf_cover.astype(jnp.float32)]
+    while levels[0].shape[1] > 1:
+        top = levels[0]
+        levels.insert(0, top[:, 0::2] + top[:, 1::2])
+    return jnp.concatenate(levels, axis=1)
+
+
 def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
                 *, strategy: str = "single_tree") -> PackedForest:
     """Pack the scan-stacked training buffers into a `PackedForest`.
@@ -116,6 +142,7 @@ def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
     accumulation order both match the training loop exactly.
     """
     base = jnp.asarray(base_score, jnp.float32).reshape(-1)
+    gain, leaf_cover = forest.gain, forest.cover
     if strategy == "single_tree":
         feat, thr, leaf = forest.feat, forest.thr, forest.value
         out_col = jnp.zeros((feat.shape[0],), jnp.int32)
@@ -125,24 +152,42 @@ def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
         thr = forest.thr.reshape(n_rounds * d, -1)
         leaf = forest.value.reshape(n_rounds * d, forest.value.shape[2], -1)
         out_col = jnp.tile(jnp.arange(d, dtype=jnp.int32), n_rounds)
+        if gain is not None:
+            gain = gain.reshape(n_rounds * d, -1)
+        if leaf_cover is not None:
+            leaf_cover = leaf_cover.reshape(n_rounds * d, -1)
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
     left, right = _heap_children(feat.shape[0], feat.shape[1])
+    cover = None if leaf_cover is None else _heap_cover(leaf_cover)
     return PackedForest(feat=feat.astype(jnp.int32),
                         thr=thr.astype(jnp.int32), left=left, right=right,
                         leaf=leaf.astype(jnp.float32), out_col=out_col,
-                        base=base, lr=jnp.float32(learning_rate))
+                        base=base, lr=jnp.float32(learning_rate),
+                        cover=cover,
+                        gain=None if gain is None
+                        else gain.astype(jnp.float32))
 
 
 def unpack_forest(pf: PackedForest) -> Tuple[T.Forest, str]:
-    """Inverse of `pack_forest`: ``(Forest, strategy)`` round trip."""
+    """Inverse of `pack_forest`: ``(Forest, strategy)`` round trip.
+
+    Leaf covers come back out of the packed heap bit-exactly (the leaf block
+    of ``pf.cover`` is a verbatim copy of the training buffers; only internal
+    covers are derived)."""
+    leaf_cover = None if pf.cover is None else pf.cover[:, pf.n_leaves - 1:]
     if pf.leaf_width == pf.n_outputs:
-        return T.Forest(feat=pf.feat, thr=pf.thr, value=pf.leaf), "single_tree"
+        return T.Forest(feat=pf.feat, thr=pf.thr, value=pf.leaf,
+                        gain=pf.gain, cover=leaf_cover), "single_tree"
     d = pf.n_outputs
     n_rounds = pf.n_trees // d
     return T.Forest(feat=pf.feat.reshape(n_rounds, d, -1),
                     thr=pf.thr.reshape(n_rounds, d, -1),
-                    value=pf.leaf.reshape(n_rounds, d, pf.n_leaves, 1)
+                    value=pf.leaf.reshape(n_rounds, d, pf.n_leaves, 1),
+                    gain=None if pf.gain is None
+                    else pf.gain.reshape(n_rounds, d, -1),
+                    cover=None if leaf_cover is None
+                    else leaf_cover.reshape(n_rounds, d, -1)
                     ), "one_vs_all"
 
 
@@ -152,7 +197,9 @@ def slice_rounds(pf: PackedForest, n_rounds: int) -> PackedForest:
     t = n_rounds * pf.trees_per_round
     return pf._replace(feat=pf.feat[:t], thr=pf.thr[:t], left=pf.left[:t],
                        right=pf.right[:t], leaf=pf.leaf[:t],
-                       out_col=pf.out_col[:t])
+                       out_col=pf.out_col[:t],
+                       cover=None if pf.cover is None else pf.cover[:t],
+                       gain=None if pf.gain is None else pf.gain[:t])
 
 
 # ---------------------------------------------------------------------------

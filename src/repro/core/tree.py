@@ -26,6 +26,7 @@ class Tree(NamedTuple):
     thr: jax.Array     # (2^D - 1,) int32 — go left if code <= thr
     value: jax.Array   # (2^D, d) float32 leaf values
     gain: jax.Array    # (2^D - 1,) float32 diagnostics
+    cover: Optional[jax.Array] = None  # (2^D,) weighted train rows per leaf
 
     @property
     def depth(self) -> int:
@@ -100,7 +101,14 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
     g_sum, h_sum = H.leaf_sums(node_pos, G * sample_w, H_diag * sample_w,
                                n_leaves=2 ** depth)
     value = -g_sum / (h_sum + lam)
-    tree = Tree(feat=heap_feat, thr=heap_thr, value=value, gain=heap_gain)
+    # Per-leaf cover (weighted training row counts): the substrate for
+    # path-dependent TreeSHAP and cover/split-count importances — packed into
+    # the serving format by `forest.pack_forest` so explanation needs no
+    # re-scan of training data.
+    cover = jax.ops.segment_sum(sample_w[:, 0], node_pos.astype(jnp.int32),
+                                num_segments=2 ** depth)
+    tree = Tree(feat=heap_feat, thr=heap_thr, value=value, gain=heap_gain,
+                cover=cover)
     return tree, node_pos
 
 
@@ -136,6 +144,8 @@ class Forest(NamedTuple):
     feat: jax.Array     # (T, 2^D - 1)
     thr: jax.Array      # (T, 2^D - 1)
     value: jax.Array    # (T, 2^D, d)
+    gain: Optional[jax.Array] = None   # (T, 2^D - 1) split gains
+    cover: Optional[jax.Array] = None  # (T, 2^D) weighted leaf covers
 
     @property
     def n_trees(self) -> int:
@@ -147,9 +157,14 @@ class Forest(NamedTuple):
 
 
 def stack_trees(trees) -> Forest:
+    def maybe_stack(xs):
+        return None if any(x is None for x in xs) else jnp.stack(xs)
+
     return Forest(feat=jnp.stack([t.feat for t in trees]),
                   thr=jnp.stack([t.thr for t in trees]),
-                  value=jnp.stack([t.value for t in trees]))
+                  value=jnp.stack([t.value for t in trees]),
+                  gain=maybe_stack([t.gain for t in trees]),
+                  cover=maybe_stack([t.cover for t in trees]))
 
 
 @functools.partial(jax.jit, static_argnames=("depth",))

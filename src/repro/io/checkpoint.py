@@ -165,6 +165,16 @@ class CheckpointManager:
 # step — the train -> checkpoint -> serve handoff (`training/serve_lib.py`).
 # ---------------------------------------------------------------------------
 
+# Manifest format history:
+#   1 — PR 2: feat/thr/left/right/leaf/out_col/base/lr (+ quantizer).
+#   2 — PR 3: optional per-node ``cover`` + ``gain`` tensors ride along,
+#       enabling checkpoint-only explainability (TreeSHAP / importances).
+# Loaders are backward compatible: manifests without ``format_version`` are
+# v1; fields absent from the manifest load as ``None`` (explainability
+# degrades gracefully — prediction is unaffected).
+FOREST_FORMAT_VERSION = 2
+
+
 def save_forest_checkpoint(root: str, packed, quantizer=None, *,
                            step: int = 0, metadata: Optional[Dict] = None,
                            keep_n: int = 3) -> None:
@@ -172,24 +182,35 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
 
     The forest is a flat pytree of arrays, so it rides the standard atomic
     `CheckpointManager` format; the manifest records enough structure
-    (``kind``/``fields``/``has_quantizer``) for `load_forest_checkpoint` to
-    rebuild without the caller supplying a template tree.  ``metadata``
-    should carry the loss name (serving uses it to pick the probability
-    transform) plus anything else the operator wants pinned to the model.
+    (``kind``/``fields``/``has_quantizer``/``format_version``) for
+    `load_forest_checkpoint` to rebuild without the caller supplying a
+    template tree.  Optional tensors (``cover``/``gain``) are stored only
+    when present — ``fields`` lists what the step actually contains.
+    ``metadata`` should carry the loss name (serving uses it to pick the
+    probability transform) plus anything else the operator wants pinned to
+    the model.
     """
-    tree: Dict[str, Any] = {"forest": packed._asdict()}
+    forest_dict = {k: v for k, v in packed._asdict().items()
+                   if v is not None}
+    tree: Dict[str, Any] = {"forest": forest_dict}
     if quantizer is not None:
         tree["quantizer"] = {"edges": quantizer.edges,
                              "n_bins": np.int32(quantizer.n_bins)}
     meta = dict(metadata or {})
-    meta.update(kind="packed_forest", fields=list(packed._fields),
-                has_quantizer=quantizer is not None)
+    meta.update(kind="packed_forest", fields=list(forest_dict),
+                has_quantizer=quantizer is not None,
+                format_version=FOREST_FORMAT_VERSION)
     mgr = CheckpointManager(root, keep_n=keep_n, async_save=False)
     mgr.save(step, tree, metadata=meta)
 
 
 def load_forest_checkpoint(root: str, step: Optional[int] = None):
-    """Load a serving checkpoint: ``(PackedForest, Quantizer | None, meta)``."""
+    """Load a serving checkpoint: ``(PackedForest, Quantizer | None, meta)``.
+
+    Backward compatible with format_version 1 steps (no ``format_version``
+    key, no cover/gain tensors): the forest loads with those fields ``None``
+    — prediction works, explainability raises informative errors.
+    """
     from repro.core.forest import PackedForest
     from repro.core.quantize import Quantizer
 
@@ -197,7 +218,8 @@ def load_forest_checkpoint(root: str, step: Optional[int] = None):
     step = step if step is not None else mgr.latest_step()
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {root}")
-    meta = mgr.manifest(step).get("metadata", {})
+    meta = dict(mgr.manifest(step).get("metadata", {}))
+    meta.setdefault("format_version", 1)
     if meta.get("kind") != "packed_forest":
         raise ValueError(f"checkpoint step_{step} under {root} is not a "
                          f"packed_forest (kind={meta.get('kind')!r})")

@@ -16,6 +16,8 @@ from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hist_kernel import histogram_pallas
 from repro.kernels.predict_kernel import forest_traverse_pallas
+from repro.kernels.ref import SHAP_BIG_BIN as _SHAP_BIG
+from repro.kernels.shap_kernel import shap_pallas
 from repro.kernels.split_kernel import split_scan_pallas
 
 
@@ -171,6 +173,56 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
     return out[:n, :d]
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("n_outputs", "depth", "row_tile",
+                                    "lane_pad", "interpret"))
+def tree_shap(codes: jax.Array, slot_feat: jax.Array, slot_lo: jax.Array,
+              slot_hi: jax.Array, slot_z: jax.Array, leaf: jax.Array,
+              out_col: jax.Array, lr, *, n_outputs: int, depth: int,
+              row_tile: int = 64, lane_pad: int | None = None,
+              interpret: bool = True) -> jax.Array:
+    """Path-dependent TreeSHAP: ``lr * sum_t shap_t(codes)`` as (n, m, d).
+
+    Takes the `explain.paths.build_path_pack` slot tensors in their native
+    ``(T, L, D)`` layout, pads rows to ``row_tile`` and the feature / leaf /
+    output axes to ``lane_pad`` lanes, re-lays the slot tensors slot-major
+    ``(T, D_pad, L_pad)`` (slot count on sublanes, leaves on lanes), runs the
+    path-walk kernel over the ``(row_tiles, trees)`` grid, and unpads.
+    Padded leaves/slots are inert null players (``o = z = 1``, zero leaf
+    values) — exactly invariant, so the result is bit-identical to the
+    unpadded oracle.  Semantics contract: `ref.tree_shap_ref`.
+    """
+    n, m = codes.shape
+    d = n_outputs
+    w = leaf.shape[2]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    codes_p = _pad_to(_pad_to(codes.astype(jnp.int32), row_tile, axis=0),
+                      lane_pad, axis=1)
+    # Slot tensors: pad the leaf axis with inert slots, then slot-major
+    # transpose and pad the (tiny) slot axis to the sublane multiple — those
+    # rows are never read (the kernel slices [0:depth]).
+    slot_pad = 8
+
+    def lay_out(x, leaf_fill, dtype):
+        x = _pad_to(x.astype(dtype), lane_pad, axis=1, value=leaf_fill)
+        return _pad_to(x.transpose(0, 2, 1), slot_pad, axis=1,
+                       value=leaf_fill)
+
+    sf_p = lay_out(slot_feat, -1, jnp.int32)
+    lo_p = lay_out(slot_lo, -1, jnp.int32)
+    hi_p = lay_out(slot_hi, _SHAP_BIG, jnp.int32)
+    z_p = lay_out(slot_z, 1.0, jnp.float32)
+    leaf_p = _pad_to(_pad_to(leaf.astype(jnp.float32), lane_pad, axis=1),
+                     lane_pad, axis=2)
+    d_pad = d + (-d) % lane_pad
+    params = jnp.asarray([[lr]], jnp.float32)
+    out = shap_pallas(params, out_col.astype(jnp.int32)[:, None], codes_p,
+                      sf_p, lo_p, hi_p, z_p, leaf_p, depth=depth,
+                      leaf_width=w, d_pad=d_pad, row_tile=row_tile,
+                      interpret=interpret)
+    return out[:n, :m, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -208,5 +260,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 histogram_ref = ref.histogram_ref
 split_scan_ref = ref.split_scan_ref
 forest_apply_ref = ref.forest_apply_ref
+tree_shap_ref = ref.tree_shap_ref
+tree_shap_interventional_ref = ref.tree_shap_interventional_ref
 mha_ref = ref.mha_ref
 decode_attention_ref = ref.decode_attention_ref

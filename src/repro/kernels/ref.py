@@ -6,6 +6,7 @@ These are the semantics contracts: tests sweep shapes/dtypes and
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +102,206 @@ def forest_apply_ref(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
 
     acc, _ = jax.lax.scan(body, F_init.astype(jnp.float32),
                           (feat, thr, leaf, out_col.astype(jnp.int32)))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# TreeSHAP over packed root-to-leaf paths (oracle for kernels/shap_kernel.py).
+# ---------------------------------------------------------------------------
+
+# "No upper bin bound" sentinel for merged path conditions (``o = lo < code
+# <= hi``).  Lives here — the semantics-contract module both the path
+# extractor (`explain.paths`) and the kernel wrapper (`ops.tree_shap`)
+# import — so padding fills can never drift from real slot values.  Codes
+# are < 2^20 always and the value is exactly representable in float32, so
+# the kernel's f32 comparisons match the oracle's int comparisons.
+SHAP_BIG_BIN = 2 ** 20
+
+
+def _unwind_weights(depth: int) -> list:
+    """Shapley permutation weights ``W(k, D) = k!(D-1-k)!/D!``, k=0..D-1."""
+    f = math.factorial
+    return [f(k) * f(depth - 1 - k) / f(depth) for k in range(depth)]
+
+
+def _poly_extend(coeffs: list, z_s, o_s) -> list:
+    """Multiply a coefficient list by ``(z_s + o_s * x)`` (Lundberg EXTEND)."""
+    out = [coeffs[0] * z_s]
+    for k in range(1, len(coeffs)):
+        out.append(coeffs[k] * z_s + coeffs[k - 1] * o_s)
+    out.append(coeffs[-1] * o_s)
+    return out
+
+
+def path_unwind_psis(o_slots: list, z_slots: list) -> list:
+    """Per-slot UNWIND sums Ψ_s for the leaf-path Shapley formula.
+
+    For a root-to-leaf path with ``D`` unique feature slots, slot ``s``
+    carrying one-fraction ``o_s`` (did the explained row follow this slot's
+    splits) and zero-fraction ``z_s`` (expected flow-through when the feature
+    is unknown), the Shapley contribution of slot ``s`` from this path is
+    ``v_leaf * (o_s - z_s) * Ψ_s`` with
+
+        Ψ_s = Σ_k W(k, D) * [x^k] Π_{j != s} (z_j + o_j x),
+
+    the subset-sum of Lundberg et al. (2018) written as a polynomial
+    convolution.  Implemented division-free: EXTEND builds prefix/suffix
+    products of the path polynomial, UNWIND of slot ``s`` is the prefix[s] ×
+    suffix[s+1] convolution — numerically safe when ``z = 0`` (empty
+    subtrees) and with one fixed op order, so the Pallas kernel that shares
+    this helper is bit-identical to the oracle.  Inputs are length-``D``
+    lists of broadcast-compatible arrays (slot axis unstacked so the caller
+    controls layout); output is the matching list of Ψ arrays.
+
+    Padding slots with ``o = z = 1`` is exactly invariant (a null player:
+    dividing the path polynomial by ``(1 + x)`` and reweighting with
+    ``W(k, D-1)`` yields the same Ψ), which is what lets every path use a
+    fixed slot count ``D`` regardless of how many unique features it has.
+    """
+    depth = len(o_slots)
+    ones = jnp.ones_like(o_slots[0])
+    prefixes = [[ones]]
+    for s in range(depth):
+        prefixes.append(_poly_extend(prefixes[-1], z_slots[s], o_slots[s]))
+    suffixes = [None] * (depth + 1)
+    suffixes[depth] = [ones]
+    for s in range(depth - 1, -1, -1):
+        suffixes[s] = _poly_extend(suffixes[s + 1], z_slots[s], o_slots[s])
+    W = _unwind_weights(depth)
+    psis = []
+    for s in range(depth):
+        pre, suf = prefixes[s], suffixes[s + 1]
+        psi = None
+        for k in range(depth):                 # degree-k coeff of pre ⊛ suf
+            ck = None
+            for j in range(max(0, k - len(suf) + 1),
+                           min(k, len(pre) - 1) + 1):
+                term = pre[j] * suf[k - j]
+                ck = term if ck is None else ck + term
+            if ck is None:
+                continue
+            wck = ck * jnp.float32(W[k])
+            psi = wck if psi is None else psi + wck
+        psis.append(psi)
+    return psis
+
+
+def _path_contribs(codes_i: jax.Array, sf, lo, hi, z) -> jax.Array:
+    """Per-(row, leaf, slot) weighted Shapley factors ``(o - z) * Ψ``.
+
+    codes_i: (n, m) int32; sf/lo/hi: (L, D) int32 slot conditions
+    (one-fraction ``o = lo < code <= hi``; padding slots use ``sf = -1``,
+    ``lo = -1`` so ``o = 1`` always); z: (L, D) float32 zero-fractions.
+    """
+    depth = sf.shape[1]
+    c = codes_i[:, jnp.maximum(sf, 0)]                     # (n, L, D)
+    o = ((c > lo) & (c <= hi)).astype(jnp.float32)
+    o_slots = [o[..., s] for s in range(depth)]
+    z_slots = [z[..., s] for s in range(depth)]
+    psis = path_unwind_psis(o_slots, z_slots)
+    return jnp.stack([(o_slots[s] - z_slots[s]) * psis[s]
+                      for s in range(depth)], axis=-1)     # (n, L, D)
+
+
+def _scatter_contribs(acc, contrib, sf, leaf_v, col, lr):
+    """Fold per-slot contributions into the (n, m, d) attribution tensor.
+
+    Slot -> feature is an exact one-hot selection (unique features per path,
+    so at most one non-zero per (leaf, feature)); leaf -> output reduction is
+    a single (n*m, L) x (L, w) contraction — the same contraction shapes the
+    Pallas kernel uses, keeping the two bit-identical.
+    """
+    n, m_feats, d = acc.shape
+    L, w = leaf_v.shape
+    f1h = (sf[..., None] == jnp.arange(m_feats, dtype=jnp.int32)
+           ).astype(jnp.float32)                           # (L, D, m)
+    A = jnp.einsum("nls,lsf->nlf", contrib, f1h)           # exact selection
+    At = A.transpose(0, 2, 1).reshape(n * m_feats, L)
+    res = jax.lax.dot_general(At, leaf_v,
+                              dimension_numbers=(((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    res = res.reshape(n, m_feats, w)
+    if w == d:                                 # full-width leaf block: col 0
+        return acc + lr * res
+    cur = jax.lax.dynamic_slice(acc, (0, 0, col), (n, m_feats, w))
+    return jax.lax.dynamic_update_slice(acc, cur + lr * res, (0, 0, col))
+
+
+@functools.partial(jax.jit, static_argnames=("depth",), donate_argnums=(0,))
+def tree_shap_ref(phi_init: jax.Array, codes: jax.Array, slot_feat: jax.Array,
+                  slot_lo: jax.Array, slot_hi: jax.Array, slot_z: jax.Array,
+                  leaf: jax.Array, out_col: jax.Array, lr: jax.Array, *,
+                  depth: int) -> jax.Array:
+    """Oracle for the Pallas path-walk SHAP kernel (path-dependent TreeSHAP).
+
+    Args:
+      phi_init: (n, m, d) float32 initial attributions (donated; usually 0).
+      codes:    (n, m) binned features.
+      slot_feat, slot_lo, slot_hi: (T, L, D) int32 per-(tree, leaf, slot)
+                merged path conditions (`explain.paths.build_path_pack`);
+                padding slots carry ``feat = -1`` / ``o = 1``.
+      slot_z:   (T, L, D) float32 zero-fractions (cover ratios).
+      leaf:     (T, L, w) float32 leaf blocks; out_col: (T,) int32 column of
+                each tree's block (as in `forest_apply_ref`).
+    Returns:
+      (n, m, d) float32 ``phi_init + lr * sum_t shap_t(codes)``, accumulated
+      tree-by-tree in scan order (the Pallas grid order).  Local accuracy:
+      summing over the feature axis and adding the expected value gives the
+      raw ensemble prediction exactly (per tree, per path).
+    """
+    codes_i = codes.astype(jnp.int32)
+
+    def body(acc, xs):
+        sf, lo, hi, z, v, col = xs
+        contrib = _path_contribs(codes_i, sf, lo, hi, z.astype(jnp.float32))
+        return _scatter_contribs(acc, contrib, sf, v, col, lr), None
+
+    acc, _ = jax.lax.scan(body, phi_init.astype(jnp.float32),
+                          (slot_feat, slot_lo, slot_hi, slot_z, leaf,
+                           out_col.astype(jnp.int32)))
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("depth",), donate_argnums=(0,))
+def tree_shap_interventional_ref(phi_init: jax.Array, codes: jax.Array,
+                                 bg_codes: jax.Array, slot_feat: jax.Array,
+                                 slot_lo: jax.Array, slot_hi: jax.Array,
+                                 leaf: jax.Array, out_col: jax.Array,
+                                 lr: jax.Array, *, depth: int) -> jax.Array:
+    """Interventional TreeSHAP against a background dataset.
+
+    Identical path machinery to `tree_shap_ref`, but the zero-fraction of a
+    slot is the *background row's* one-fraction (features take the
+    background's values when "absent") and attributions are averaged over
+    the ``(B, m)`` background rows — so ``sum(phi) = f(x) - mean_b f(b)``
+    exactly and the matching base value is the mean background prediction.
+    """
+    codes_i = codes.astype(jnp.int32)
+    bg_i = bg_codes.astype(jnp.int32)
+    n_bg = bg_codes.shape[0]
+
+    def body(acc, xs):
+        sf, lo, hi, v, col = xs
+        c = codes_i[:, jnp.maximum(sf, 0)]                 # (n, L, D)
+        o = ((c > lo) & (c <= hi)).astype(jnp.float32)
+        cb = bg_i[:, jnp.maximum(sf, 0)]                   # (B, L, D)
+        ob = ((cb > lo) & (cb <= hi)).astype(jnp.float32)
+        o_slots = [o[..., s] for s in range(depth)]
+
+        def bg_body(acc_c, zb):                            # zb: (L, D)
+            z_slots = [zb[..., s] for s in range(depth)]
+            psis = path_unwind_psis(o_slots, z_slots)
+            contrib = jnp.stack([(o_slots[s] - z_slots[s]) * psis[s]
+                                 for s in range(depth)], axis=-1)
+            return acc_c + contrib, None
+
+        csum, _ = jax.lax.scan(bg_body, jnp.zeros(o.shape, jnp.float32), ob)
+        contrib = csum / jnp.float32(n_bg)
+        return _scatter_contribs(acc, contrib, sf, v, col, lr), None
+
+    acc, _ = jax.lax.scan(body, phi_init.astype(jnp.float32),
+                          (slot_feat, slot_lo, slot_hi, leaf,
+                           out_col.astype(jnp.int32)))
     return acc
 
 

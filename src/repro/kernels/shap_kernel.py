@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: batched path-dependent TreeSHAP on a PackedForest.
+
+Explanation serving is a *heavier* cousin of the traversal kernel
+(`predict_kernel.py`): instead of walking each row to one leaf, every
+root-to-leaf path of the tree contributes a Shapley term to every row — the
+same "one thread block per (row tile, tree)" decomposition GPUTreeShap
+(Mitchell et al., 2022) uses, mapped onto the TPU's MXU/VPU split:
+
+  * slot gathers are one-hot matmuls on the MXU: for path slot ``s`` the
+    (L, M) one-hot of ``slot_feat[:, s]`` pulls each path's split feature
+    for the whole row tile in a single (TN, M) x (M, L) contraction;
+  * the EXTEND/UNWIND polynomial algebra (prefix/suffix products of
+    ``(z_j + o_j x)`` and the per-slot convolution Ψ_s) is unrolled
+    element-wise VPU work over (TN, L) planes — `ref.path_unwind_psis`, the
+    *same function* the jnp oracle runs, so the two are bit-identical by
+    construction;
+  * leaf reduction and output-column placement are exact 0/1 contractions,
+    as in the traversal kernel.
+
+Path metadata arrives pre-packed per (tree, leaf, slot) by
+`repro.explain.paths.build_path_pack`: merged unique-feature conditions
+(``o = lo < code <= hi``), cover-ratio zero-fractions ``z``, with inert
+padding slots (``o = z = 1`` — exactly invariant null players).  Slot
+tensors are stored slot-major ``(T, D_pad, L)`` so the lane axis is the
+leaf axis (L = 2^depth >= 8 after padding) and the tiny slot axis sits on
+sublanes.
+
+Grid = ``(row_tiles, trees)``; the (TN, M, D_out) output block accumulates
+across the sequential tree axis (init at t == 0, ``+= lr * contribution``
+per tree — the oracle's scan order).  VMEM working set per step: codes tile
+(TN x M x 4B), D x one-hot planes (L x M), the poly planes (~D^2 x TN x L),
+and the (TN, M, D_out) in/out tile — with TN = 64, M <= 128, L = 64, D = 6,
+d <= 128 that is ~64 KB + 1.2 MB + 6 MB (out tile at the d = 128 extreme),
+inside 16 MB VMEM; shrink ``row_tile`` for very wide m x d products.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import path_unwind_psis
+
+
+def _shap_kernel(params_ref, col_ref, codes_ref, sf_ref, lo_ref, hi_ref,
+                 z_ref, leaf_ref, out_ref, *, depth: int, leaf_width: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    lr = params_ref[0, 0]
+    codes = codes_ref[...].astype(jnp.float32)             # (TN, M)
+    tn, m_pad = codes.shape
+    l_pad = leaf_ref.shape[1]
+
+    # Per-slot one-fractions via one-hot feature gathers (exact selections).
+    o_slots, z_slots, f_ohs = [], [], []
+    for s in range(depth):
+        sf_s = sf_ref[0, s, :]                             # (L,) int32
+        f_oh = (sf_s[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (l_pad, m_pad), 1)).astype(jnp.float32)
+        c_s = jax.lax.dot_general(                         # (TN, L) codes at
+            codes, f_oh,                                   # each path's split
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_s = ((c_s > lo_ref[0, s, :].astype(jnp.float32))
+               & (c_s <= hi_ref[0, s, :].astype(jnp.float32))
+               ).astype(jnp.float32)
+        o_slots.append(o_s)
+        z_slots.append(z_ref[0, s, :])
+        f_ohs.append(f_oh)
+
+    # EXTEND/UNWIND — shared with the oracle, so bit-identical.
+    psis = path_unwind_psis(o_slots, z_slots)
+
+    # Scatter slots onto the feature axis: A[n, l, f] has at most one
+    # non-zero slot per (leaf, feature) — an exact sum of D selection planes.
+    A = None
+    for s in range(depth):
+        contrib_s = (o_slots[s] - z_slots[s]) * psis[s]    # (TN, L)
+        term = contrib_s[:, :, None] * f_ohs[s][None, :, :]
+        A = term if A is None else A + term                # (TN, L, M)
+
+    At = A.transpose(0, 2, 1).reshape(tn * m_pad, l_pad)
+    res = jax.lax.dot_general(At, leaf_ref[0],             # (TN*M, W)
+                              dimension_numbers=(((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    # Placement matrix: leaf-block column i lands in output column col + i.
+    col = col_ref[0, 0]
+    w_pad, d_pad = res.shape[1], out_ref.shape[2]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (w_pad, d_pad), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (w_pad, d_pad), 1)
+    place = ((rows < leaf_width) & (rows + col == cols)).astype(jnp.float32)
+    placed = jax.lax.dot_general(res, place,
+                                 dimension_numbers=(((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    out_ref[...] += lr * placed.reshape(tn, m_pad, d_pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "leaf_width", "d_pad", "row_tile", "interpret"))
+def shap_pallas(params: jax.Array, out_col: jax.Array, codes: jax.Array,
+                slot_feat: jax.Array, slot_lo: jax.Array, slot_hi: jax.Array,
+                slot_z: jax.Array, leaf: jax.Array, *, depth: int,
+                leaf_width: int, d_pad: int, row_tile: int = 64,
+                interpret: bool = True) -> jax.Array:
+    """Raw kernel entry (padded inputs required — use `ops.tree_shap`).
+
+    Args:
+      params:  (1, 1) float32 [learning_rate] (SMEM scalar).
+      out_col: (T, 1) int32 starting output column per tree (SMEM scalars).
+      codes:   (n, M) int32 binned features.  n % row_tile == 0.
+      slot_feat, slot_lo, slot_hi: (T, D_pad, L) int32 slot-major path
+               conditions, D_pad >= depth (extra slot rows are never read);
+               padding slots/leaves carry feat = -1, lo = -1 (o = 1).
+      slot_z:  (T, D_pad, L) float32 zero-fractions (1 on padding).
+      leaf:    (T, L, W) float32 leaf blocks; columns beyond ``leaf_width``
+               must be zero padding.
+      d_pad:   padded output dimension (>= out_col + leaf_width everywhere).
+    Returns:
+      (n, M, d_pad) float32 per-(row, feature, output) SHAP values,
+      ``lr``-scaled and summed over trees (base values NOT included).
+    """
+    n_pad, m_pad = codes.shape
+    n_trees, d_slot_pad, l_pad = slot_feat.shape
+    w_pad = leaf.shape[2]
+    assert n_pad % row_tile == 0 and d_slot_pad >= depth
+    assert leaf.shape[1] == l_pad and l_pad >= 2 ** depth
+    grid = (n_pad // row_tile, n_trees)
+    return pl.pallas_call(
+        functools.partial(_shap_kernel, depth=depth, leaf_width=leaf_width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda r, t: (t, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((row_tile, m_pad), lambda r, t: (r, 0)),
+            pl.BlockSpec((1, d_slot_pad, l_pad), lambda r, t: (t, 0, 0)),
+            pl.BlockSpec((1, d_slot_pad, l_pad), lambda r, t: (t, 0, 0)),
+            pl.BlockSpec((1, d_slot_pad, l_pad), lambda r, t: (t, 0, 0)),
+            pl.BlockSpec((1, d_slot_pad, l_pad), lambda r, t: (t, 0, 0)),
+            pl.BlockSpec((1, l_pad, w_pad), lambda r, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, m_pad, d_pad),
+                               lambda r, t: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, m_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(params, out_col, codes, slot_feat, slot_lo, slot_hi, slot_z, leaf)

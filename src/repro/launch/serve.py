@@ -6,8 +6,13 @@ Loads a serving checkpoint written by `io.checkpoint.save_forest_checkpoint`
 through it in micro-batched windows, reporting latency percentiles and
 throughput — the smoke-level stand-in for a real RPC front end.
 
+With ``--explain`` the same driver exercises the explanation serving path:
+micro-batched TreeSHAP over the request stream (per-request latency), plus a
+top-k attribution report and checkpoint-only feature importances.
+
   PYTHONPATH=src python -m repro.launch.serve --demo --requests 64
   PYTHONPATH=src python -m repro.launch.serve --ckpt /ckpts/otto --requests 256
+  PYTHONPATH=src python -m repro.launch.serve --demo --explain --topk 5
 """
 from __future__ import annotations
 
@@ -52,6 +57,11 @@ def main():
     ap.add_argument("--features", type=int, default=0,
                     help="request feature count (default: from metadata)")
     ap.add_argument("--max-batch", type=int, default=4096)
+    ap.add_argument("--explain", action="store_true",
+                    help="also drive the SHAP explanation endpoint and "
+                    "print a top-k attribution report")
+    ap.add_argument("--topk", type=int, default=3,
+                    help="features per output in the --explain report")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -94,6 +104,39 @@ def main():
     print(f"[serve] latency/request: p50 {np.percentile(lat, 50):.2f}ms  "
           f"p99 {np.percentile(lat, 99):.2f}ms  "
           f"(window={args.window}, max_batch={args.max_batch})")
+
+    if args.explain:
+        if not server.explainable:
+            ap.error(f"checkpoint {args.ckpt} predates cover packing "
+                     "(format_version 1): --explain unavailable; re-save "
+                     "the checkpoint from a freshly trained model")
+        server.serve_explain(requests[:args.window])       # warm compile
+        server.stats["explain_requests"] = 0               # steady-state only
+        server.stats["explain_rows"] = 0
+        server.stats["explain_time_s"] = 0.0
+        elat = []
+        for ofs in range(0, len(requests), args.window):
+            w0 = time.perf_counter()
+            outs = server.serve_explain(requests[ofs:ofs + args.window])
+            elat.extend([(time.perf_counter() - w0) * 1e3] * len(outs))
+        elat = np.asarray(elat)
+        erate = (server.stats["explain_rows"]
+                 / max(server.stats["explain_time_s"], 1e-9))
+        print(f"[serve] explain latency/request: "
+              f"p50 {np.percentile(elat, 50):.2f}ms  "
+              f"p99 {np.percentile(elat, 99):.2f}ms  "
+              f"({erate:,.0f} rows/s in-shap)")
+        phi, base = outs[-1]                               # last window
+        row_phi = phi[0]                                   # (m, d)
+        for j in range(row_phi.shape[1]):
+            order = np.argsort(-np.abs(row_phi[:, j]))[:args.topk]
+            feats = ", ".join(f"x{f}={row_phi[f, j]:+.4f}" for f in order)
+            print(f"[serve]   output {j}: base {base[j]:+.4f}  top "
+                  f"{args.topk}: {feats}")
+        imp = server.feature_importances("gain")
+        order = np.argsort(-imp)[:args.topk]
+        print("[serve] global gain importances: "
+              + ", ".join(f"x{f}={imp[f]:.3f}" for f in order))
 
 
 if __name__ == "__main__":

@@ -58,6 +58,17 @@ class ForestServer:
     >>> outs = server.serve([req1, req2, req3])     # micro-batched requests
     """
 
+    _ZERO_STATS = {"requests": 0, "rows": 0, "batches": 0,
+                   "predict_time_s": 0.0, "explain_requests": 0,
+                   "explain_rows": 0, "explain_time_s": 0.0}
+
+    @staticmethod
+    def _concat_requests(requests: Sequence):
+        """Shared micro-batching front: row-block requests -> one batch +
+        the per-request sizes needed to split results back."""
+        blocks = [np.atleast_2d(np.asarray(r, np.float32)) for r in requests]
+        return np.concatenate(blocks, axis=0), [b.shape[0] for b in blocks]
+
     def __init__(self, packed, quantizer=None,
                  cfg: ForestServeConfig = ForestServeConfig()):
         from repro.core.histogram import resolve_kernel_mode
@@ -65,8 +76,14 @@ class ForestServer:
         self.quantizer = quantizer
         self.cfg = cfg
         self.mode = resolve_kernel_mode(cfg.use_kernel)
-        self.stats: Dict[str, Any] = {"requests": 0, "rows": 0, "batches": 0,
-                                      "predict_time_s": 0.0}
+        self._path_pack = None          # lazy per-model path-slot cache
+        self.stats: Dict[str, Any] = dict(self._ZERO_STATS)
+
+    @property
+    def explainable(self) -> bool:
+        """Whether the loaded forest carries per-node covers (format_version
+        >= 2) — the substrate for path-dependent SHAP and importances."""
+        return self.packed.cover is not None
 
     @classmethod
     def from_checkpoint(cls, root: str, step: Optional[int] = None,
@@ -129,15 +146,87 @@ class ForestServer:
         """
         if not requests:
             return []
-        blocks = [np.atleast_2d(np.asarray(r, np.float32)) for r in requests]
-        sizes = [b.shape[0] for b in blocks]
-        out = self.predict(np.concatenate(blocks, axis=0))
+        batch, sizes = self._concat_requests(requests)
+        out = self.predict(batch)
         self.stats["requests"] += len(requests)
         outs, ofs = [], 0
         for s in sizes:
             outs.append(np.asarray(out[ofs:ofs + s]))
             ofs += s
         return outs
+
+    # -- explanation serving -------------------------------------------------
+    def explain(self, X, *, algorithm: str = "path_dependent",
+                background=None) -> Tuple[np.ndarray, np.ndarray]:
+        """Micro-batched SHAP endpoint: ``(phi (n, m, d), base_values (d,))``.
+
+        Same bounded-compile-cache shape policy as `predict_codes`: requests
+        up to ``max_batch`` pad to the next power of two; larger inputs
+        stream through ``max_batch``-sized chunks.  The per-model path-slot
+        pack is built once and cached on the server.
+        """
+        from repro import explain as EX
+        if algorithm == "path_dependent" and not self.explainable:
+            raise RuntimeError(
+                "this checkpoint has no cover tensor (format_version 1): "
+                "path-dependent SHAP is disabled; re-checkpoint the model "
+                "or pass algorithm='interventional' with a background set")
+        codes = self._codes(X)
+        bg = None if background is None else self._codes(background)
+        if self._path_pack is None:
+            self._path_pack = EX.build_path_pack(
+                self.packed, need_cover=(self.packed.cover is not None))
+        n = codes.shape[0]
+        t0 = time.perf_counter()
+        if n > self.cfg.max_batch:
+            # Same chunk policy as predict_codes: the operator's row_chunk
+            # bounds the per-dispatch working set (the SHAP tile is
+            # (rows, m, d) — m times predict's), clamped to max_batch so the
+            # compile cache stays bounded.
+            phi, base = EX.shap_values(
+                self.packed, codes, algorithm=algorithm, background=bg,
+                mode=self.mode,
+                row_chunk=min(self.cfg.row_chunk, self.cfg.max_batch),
+                pack=self._path_pack)
+        else:
+            bucket = max(8, 1 << (max(n, 1) - 1).bit_length())
+            padded = jnp.pad(codes, ((0, bucket - n), (0, 0)))
+            phi, base = EX.shap_values(
+                self.packed, padded, algorithm=algorithm, background=bg,
+                mode=self.mode, pack=self._path_pack)
+            phi = phi[:n]
+        phi = jax.block_until_ready(phi)
+        self.stats["explain_rows"] += int(n)
+        self.stats["explain_time_s"] += time.perf_counter() - t0
+        return np.asarray(phi), np.asarray(base)
+
+    def serve_explain(self, requests: Sequence, *,
+                      algorithm: str = "path_dependent", background=None
+                      ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Micro-batch explanation requests through ONE SHAP pass; returns a
+        ``(phi_i, base_values)`` pair per request (base is shared)."""
+        if not requests:
+            return []
+        batch, sizes = self._concat_requests(requests)
+        phi, base = self.explain(batch, algorithm=algorithm,
+                                 background=background)
+        self.stats["explain_requests"] += len(requests)
+        outs, ofs = [], 0
+        for s in sizes:
+            outs.append((phi[ofs:ofs + s], base))
+            ofs += s
+        return outs
+
+    def feature_importances(self, kind: str = "gain") -> Optional[np.ndarray]:
+        """Checkpoint-only importances; ``None`` when the forest predates
+        cover packing (format_version 1) instead of raising."""
+        from repro import explain as EX
+        if not self.explainable:
+            return None
+        m = (None if self.quantizer is None
+             else self.quantizer.edges.shape[0])
+        return np.asarray(EX.feature_importances(self.packed, kind=kind,
+                                                 n_features=m))
 
     def throughput(self) -> float:
         """Rows/sec over everything served so far."""
@@ -146,8 +235,7 @@ class ForestServer:
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a compile-cache warmup pass)."""
-        self.stats = {"requests": 0, "rows": 0, "batches": 0,
-                      "predict_time_s": 0.0}
+        self.stats = dict(self._ZERO_STATS)
 
 
 # ---------------------------------------------------------------------------

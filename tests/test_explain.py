@@ -1,0 +1,317 @@
+"""Explainability subsystem: TreeSHAP local accuracy, kernel/oracle bit
+parity, importances, leaf embeddings, cover packing, and the versioned
+checkpoint + explanation serving path."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forest as FO
+from repro.core.boosting import GBDTConfig, SketchBoost
+from repro.data.pipeline import make_tabular
+from repro import explain as EX
+from repro.kernels import ops, ref
+
+
+def _fit(strategy="single_tree", method="random_projection", k=2, seed=21,
+         **kw):
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=seed)
+    cfg = GBDTConfig(loss="multiclass", strategy=strategy,
+                     sketch_method=method, sketch_k=k, n_trees=4, depth=3,
+                     learning_rate=0.3, **kw)
+    m = SketchBoost(cfg).fit(X, y)
+    return m, X, y
+
+
+# ---------------------------------------------------------------------------
+# Local accuracy: base + sum over features == predict_raw, every sketch
+# method x both tree strategies (the acceptance invariant).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["none", "top_outputs", "random_sampling",
+                                    "random_projection", "truncated_svd"])
+@pytest.mark.parametrize("strategy", ["single_tree", "one_vs_all"])
+def test_shap_local_accuracy(method, strategy):
+    m, X, _ = _fit(strategy=strategy, method=method)
+    phi, base = m.shap_values(X, check_additivity=True)
+    raw = np.asarray(m.predict_raw(X))
+    assert phi.shape == (X.shape[0], X.shape[1], 4)
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+
+
+def test_shap_local_accuracy_with_sampling():
+    """SGB/GOSS weights flow into covers; local accuracy must survive."""
+    m, X, _ = _fit(subsample=0.7, seed=5)
+    phi, base = m.shap_values(X)
+    raw = np.asarray(m.predict_raw(X))
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+
+
+def test_shap_interventional_local_accuracy():
+    m, X, _ = _fit()
+    bg = X[:13]
+    phi, base = m.shap_values(X[:60], algorithm="interventional",
+                              background=bg)
+    raw = np.asarray(m.predict_raw(X[:60]))
+    base_expect = np.asarray(m.predict_raw(bg)).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(base), base_expect, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+
+
+def test_shap_row_chunking_matches_single_dispatch():
+    m, X, _ = _fit()
+    codes = m._bin(X)
+    whole, base = EX.shap_values(m.packed, codes, mode="jnp")
+    chunked, base2 = EX.shap_values(m.packed, codes, mode="jnp",
+                                    row_chunk=41)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(chunked))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(base2))
+
+
+def test_shap_iteration_slice():
+    m, X, _ = _fit(seed=9)
+    phi, base = m.shap_values(X[:40], iteration=2)
+    raw = np.asarray(m.predict_raw(X[:40], iteration=2))
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas path-walk kernel vs jnp oracle: bit parity (interpret mode).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["single_tree", "one_vs_all"])
+def test_shap_kernel_bit_identical_to_oracle(strategy):
+    m, X, _ = _fit(strategy=strategy, seed=31)
+    codes = m._bin(X)
+    phi_j, base = EX.shap_values(m.packed, codes, mode="jnp")
+    phi_k, base_k = EX.shap_values(m.packed, codes, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(phi_k), np.asarray(phi_j))
+    np.testing.assert_array_equal(np.asarray(base_k), np.asarray(base))
+
+
+def test_shap_kernel_multi_tile_and_padding():
+    """Odd row counts / feature counts exercise tile + lane padding."""
+    m, X, _ = _fit(seed=37)
+    codes = m._bin(X)[:70]                    # 70 rows: 3 tiles of 32 + pad
+    pack = EX.build_path_pack(m.packed)
+    pf = m.packed
+    phi0 = jnp.zeros((70, 6, 4), jnp.float32)
+    r = ref.tree_shap_ref(phi0, codes, pack.slot_feat, pack.slot_lo,
+                          pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,
+                          pf.lr, depth=pf.depth)
+    k = ops.tree_shap(codes, pack.slot_feat, pack.slot_lo, pack.slot_hi,
+                      pack.slot_z, pf.leaf, pf.out_col, pf.lr,
+                      n_outputs=4, depth=pf.depth, row_tile=32,
+                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+def test_shap_kernel_env_interpret(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 routes auto mode through the Pallas kernel."""
+    from repro.core.histogram import resolve_kernel_mode
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert resolve_kernel_mode(True) == "interpret"
+    m, X, _ = _fit(seed=41)
+    codes = m._bin(X)[:40]
+    phi_a, _ = EX.shap_values(m.packed, codes, mode=True)
+    phi_j, _ = EX.shap_values(m.packed, codes, mode="jnp")
+    np.testing.assert_array_equal(np.asarray(phi_a), np.asarray(phi_j))
+
+
+# ---------------------------------------------------------------------------
+# Cover packing + path extraction structure
+# ---------------------------------------------------------------------------
+
+def test_cover_heap_consistency():
+    """Internal covers equal the sum of their children; root = total weight."""
+    m, X, _ = _fit(seed=51)
+    pf = m.packed
+    cover = np.asarray(pf.cover)
+    H = pf.feat.shape[1]
+    for i in range(H):
+        np.testing.assert_allclose(cover[:, i],
+                                   cover[:, 2 * i + 1] + cover[:, 2 * i + 2],
+                                   rtol=1e-6)
+    np.testing.assert_allclose(cover[:, 0], X.shape[0], rtol=1e-6)
+
+
+def test_pack_unpack_roundtrip_cover_gain():
+    """Satellite: pack/unpack round trip stays bit-exact incl. new fields."""
+    for strategy in ("single_tree", "one_vs_all"):
+        m, _, _ = _fit(strategy=strategy, seed=53)
+        forest2, strat2 = FO.unpack_forest(m.packed)
+        assert strat2 == strategy
+        np.testing.assert_array_equal(np.asarray(forest2.gain),
+                                      np.asarray(m.forest.gain))
+        np.testing.assert_array_equal(np.asarray(forest2.cover),
+                                      np.asarray(m.forest.cover))
+
+
+def test_python_loop_packs_same_cover():
+    """loop='python' and loop='scan' train identical cover/gain tensors."""
+    ms = {}
+    for loop in ("scan", "python"):
+        m, _, _ = _fit(seed=57, loop=loop)
+        ms[loop] = m
+    np.testing.assert_array_equal(np.asarray(ms["scan"].packed.cover),
+                                  np.asarray(ms["python"].packed.cover))
+    np.testing.assert_array_equal(np.asarray(ms["scan"].packed.gain),
+                                  np.asarray(ms["python"].packed.gain))
+
+
+def test_path_pack_slots_are_merged_and_padded():
+    m, X, _ = _fit(seed=61)
+    pack = EX.build_path_pack(m.packed)
+    sf = np.asarray(pack.slot_feat)             # (T, L, D)
+    z = np.asarray(pack.slot_z)
+    # Unique features per (tree, leaf): no feature id repeats across slots.
+    T_, L, D = sf.shape
+    for t in range(T_):
+        for leaf in range(L):
+            real = sf[t, leaf][sf[t, leaf] >= 0]
+            assert len(real) == len(set(real.tolist()))
+    # Padding slots are inert null players.
+    np.testing.assert_array_equal(z[sf == -1], 1.0)
+    # Leaf weights are probabilities summing to ~1 on non-degenerate trees.
+    lw = np.asarray(pack.leaf_weight)
+    np.testing.assert_allclose(lw.sum(axis=1), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Importances + apply
+# ---------------------------------------------------------------------------
+
+def test_feature_importances_kinds():
+    m, X, _ = _fit(seed=71)
+    for kind in EX.IMPORTANCE_KINDS:
+        imp = np.asarray(m.feature_importances(kind))
+        assert imp.shape == (X.shape[1],)
+        assert (imp >= 0).all()
+        np.testing.assert_allclose(imp.sum(), 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(m.feature_importances_),
+                                  np.asarray(m.feature_importances("gain")))
+    with pytest.raises(ValueError):
+        m.feature_importances("nope")
+
+
+def test_split_count_excludes_pass_through():
+    """Pass-through heap padding must not count as feature-0 splits."""
+    m, _, _ = _fit(seed=73)
+    pf = m.packed
+    mask = np.asarray(EX.real_split_mask(pf))
+    thr = np.asarray(pf.thr)
+    n_bins = m.cfg.n_bins
+    # Every node the mask keeps has a legal threshold (< n_bins - 1); the
+    # grower's pass-through nodes carry thr == n_bins - 1.
+    assert (thr[mask] < n_bins - 1).all()
+
+
+def test_apply_matches_tree_walk():
+    from repro.core import tree as T
+    m, X, _ = _fit(seed=75)
+    codes = m._bin(X)
+    emb = np.asarray(m.apply(X))
+    assert emb.shape == (X.shape[0], m.packed.n_trees)
+    for t in (0, m.packed.n_trees - 1):
+        expect = np.asarray(T.tree_leaf_index(m.packed.feat[t],
+                                              m.packed.thr[t], codes,
+                                              depth=m.packed.depth))
+        np.testing.assert_array_equal(emb[:, t], expect)
+
+
+# ---------------------------------------------------------------------------
+# Versioned checkpoints + explanation serving
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_format_version_roundtrip(tmp_path):
+    from repro.io.checkpoint import (FOREST_FORMAT_VERSION,
+                                     load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    m, X, _ = _fit(seed=81)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    pf, q, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["format_version"] == FOREST_FORMAT_VERSION == 2
+    np.testing.assert_array_equal(np.asarray(pf.cover),
+                                  np.asarray(m.packed.cover))
+    np.testing.assert_array_equal(np.asarray(pf.gain),
+                                  np.asarray(m.packed.gain))
+    # Explainability survives the round trip bit-for-bit.
+    codes = m._bin(X[:30])
+    a, _ = EX.shap_values(pf, codes, mode="jnp")
+    b, _ = EX.shap_values(m.packed, codes, mode="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_old_checkpoint_loads_with_importances_disabled(tmp_path):
+    """Satellite: a format_version-1 checkpoint (no cover/gain, no version
+    key) loads and predicts; importances/SHAP are disabled, not a crash."""
+    from repro.io.checkpoint import (load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = _fit(seed=83)
+    old = m.packed._replace(cover=None, gain=None)   # pre-v2 field set
+    save_forest_checkpoint(str(tmp_path), old, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    # Strip the version key to simulate a manifest written before PR 3.
+    man_path = os.path.join(str(tmp_path), "step_0", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    del man["metadata"]["format_version"]
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+
+    pf, q, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["format_version"] == 1
+    assert pf.cover is None and pf.gain is None
+    np.testing.assert_array_equal(
+        np.asarray(FO.predict_raw(pf, m._bin(X), mode="jnp")),
+        np.asarray(m.predict_raw(X)))
+    server = ForestServer.from_checkpoint(str(tmp_path))
+    assert not server.explainable
+    assert server.feature_importances() is None
+    with pytest.raises(RuntimeError):
+        server.explain(X[:4])
+    with pytest.raises(ValueError):
+        EX.shap_values(pf, m._bin(X[:4]), mode="jnp")
+    # Interventional SHAP never needed covers — still exact on old ckpts.
+    phi, base = EX.shap_values(pf, m._bin(X[:20]),
+                               algorithm="interventional",
+                               background=m._bin(X[:8]))
+    raw = np.asarray(FO.predict_raw(pf, m._bin(X[:20]), mode="jnp"))
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+
+
+def test_forest_server_explain_endpoint(tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = _fit(seed=85)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path))
+    assert server.explainable
+
+    phi, base = server.explain(X[:11])             # pow-2 bucket padding
+    expect, base_e = m.shap_values(X[:11])
+    np.testing.assert_array_equal(phi, np.asarray(expect))
+    np.testing.assert_array_equal(base, np.asarray(base_e))
+    assert server.stats["explain_rows"] == 11
+
+    rng = np.random.default_rng(0)
+    reqs = [X[rng.integers(0, len(X), size=s)] for s in (1, 5, 9)]
+    outs = server.serve_explain(reqs)
+    assert [o[0].shape[0] for o in outs] == [1, 5, 9]
+    joint, _ = server.explain(np.concatenate(reqs, axis=0))
+    np.testing.assert_array_equal(np.concatenate([o[0] for o in outs]),
+                                  joint)
+    imp = server.feature_importances("gain")
+    np.testing.assert_allclose(imp.sum(), 1.0, rtol=1e-5)
