@@ -1,0 +1,18 @@
+"""Model-inspection subsystem over `core.forest.PackedForest`.
+
+Exact multioutput TreeSHAP (path-dependent + interventional), feature
+importances, and leaf embeddings — all computed from the packed serving
+buffers (covers and gains ride the checkpoint), with the hot path on the
+Pallas path-walk kernel under the standard ``use_kernel`` modes.  See
+docs/explainability.md.
+"""
+from repro.explain.importance import (IMPORTANCE_KINDS, apply_forest,
+                                      feature_importances, real_split_mask)
+from repro.explain.paths import BIG_BIN, PathPack, build_path_pack
+from repro.explain.shap import (ALGORITHMS, expected_values, shap_values)
+
+__all__ = [
+    "ALGORITHMS", "BIG_BIN", "IMPORTANCE_KINDS", "PathPack", "apply_forest",
+    "build_path_pack", "expected_values", "feature_importances",
+    "real_split_mask", "shap_values",
+]

@@ -1,0 +1,80 @@
+"""Feature importances and leaf embeddings straight from packed buffers.
+
+No training data is touched: gains and per-node covers were packed into the
+`PackedForest` at fit time, so a serving process can answer "which features
+drive this model" from the checkpoint alone.  Pass-through heap nodes (the
+padding the depth-wise grower emits when no positive-gain split exists) are
+excluded via the cover tensor: a *real* split routes weighted rows to both
+children, so ``cover[right_child] > 0``; pass-through routing sends
+everything left.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as T
+
+IMPORTANCE_KINDS = ("gain", "cover", "split_count")
+
+
+def real_split_mask(pf) -> jax.Array:
+    """(T, 2^D - 1) bool — internal nodes carrying an actual split."""
+    if pf.cover is None:
+        raise ValueError(
+            "feature importances need the per-node cover tensor; this "
+            "PackedForest was packed without one (format_version 1 "
+            "checkpoint?) — retrain/re-checkpoint to enable importances.")
+    n_internal = pf.feat.shape[1]
+    right = 2 * jnp.arange(n_internal, dtype=jnp.int32) + 2
+    return (pf.cover[:, :n_internal] > 0) & (pf.cover[:, right] > 0)
+
+
+def feature_importances(pf, *, kind: str = "gain",
+                        n_features: Optional[int] = None,
+                        normalize: bool = True) -> jax.Array:
+    """Per-feature importance vector ``(n_features,)``.
+
+    ``gain``: summed split gains (needs ``pf.gain``); ``cover``: summed
+    weighted row counts through each split; ``split_count``: number of real
+    splits.  Normalised to sum to 1 by default (sklearn convention).
+    """
+    if kind not in IMPORTANCE_KINDS:
+        raise ValueError(f"unknown importance kind {kind!r}; "
+                         f"expected one of {IMPORTANCE_KINDS}")
+    mask = real_split_mask(pf).astype(jnp.float32)
+    if kind == "gain":
+        if pf.gain is None:
+            raise ValueError("gain importances need the packed gain tensor "
+                             "(absent on this forest); use kind='cover' or "
+                             "'split_count'")
+        w = pf.gain * mask
+    elif kind == "cover":
+        w = pf.cover[:, :pf.feat.shape[1]] * mask
+    else:
+        w = mask
+    if n_features is None:
+        n_features = int(jnp.max(pf.feat)) + 1
+    imp = jax.ops.segment_sum(w.reshape(-1),
+                              pf.feat.reshape(-1).astype(jnp.int32),
+                              num_segments=n_features)
+    if normalize:
+        total = jnp.sum(imp)
+        imp = jnp.where(total > 0, imp / total, imp)
+    return imp
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _apply_walk(feat, thr, codes, *, depth):
+    walk = jax.vmap(lambda f, t: T.tree_leaf_index(f, t, codes, depth=depth))
+    return walk(feat, thr).T.astype(jnp.int32)             # (n, T)
+
+
+def apply_forest(pf, codes: jax.Array) -> jax.Array:
+    """Leaf-index embeddings: ``(n, T)`` int32, the leaf (0..2^D-1) each row
+    lands in per tree — the GBDT-as-feature-encoder trick (leaf one-hots
+    feed linear models / nearest-neighbour indexes)."""
+    return _apply_walk(pf.feat, pf.thr, codes, depth=pf.depth)

@@ -1,0 +1,111 @@
+"""Root-to-leaf path extraction from a `PackedForest` (host-side, numpy).
+
+TreeSHAP consumes trees path-by-path: each (tree, leaf) pair is a path whose
+edges carry a split condition and a cover ratio.  This module flattens the
+perfect-heap forest into fixed-shape per-(tree, leaf, slot) tensors once per
+model — they depend only on the forest, never on the rows being explained —
+so both the jnp oracle (`kernels.ref.tree_shap_ref`) and the Pallas
+path-walk kernel (`kernels.shap_kernel`) see identical, rectangular inputs:
+
+  * duplicate features along a path are merged into one *slot* (GPUTreeShap
+    does the same host-side preprocessing): their box conditions intersect
+    to a single bin interval ``lo < code <= hi`` and their cover ratios
+    multiply into one zero-fraction ``z``;
+  * every path is padded to exactly ``depth`` slots with inert null players
+    (``feat = -1``, ``o = 1``, ``z = 1``) — exactly invariant for the
+    Shapley subset sums (see `kernels.ref.path_unwind_psis`), which is what
+    makes a fixed slot axis possible;
+  * empty subtrees (pass-through routing) get ``z = 0`` edges and zero leaf
+    values, contributing exactly nothing.
+
+Covers come from `PackedForest.cover`, packed at fit time — explanation
+never re-scans training data.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# "No upper bound" sentinel for merged bin intervals — shared with the
+# kernel wrapper's padding fills via the oracle module (the layering-safe
+# home: kernels never import explain).
+from repro.kernels.ref import SHAP_BIG_BIN as BIG_BIN
+
+
+class PathPack(NamedTuple):
+    """Per-(tree, leaf, slot) path metadata, all ``(T, L, D)`` unless noted.
+
+    ``o = (code[slot_feat] > slot_lo) & (code[slot_feat] <= slot_hi)`` is the
+    one-fraction; ``slot_z`` the path-dependent zero-fraction;
+    ``leaf_weight`` (T, L) is ``prod_s z_s`` — the unconditional probability
+    mass reaching each leaf, used for expected values.
+    """
+    slot_feat: jax.Array   # int32, -1 on padding slots
+    slot_lo: jax.Array     # int32 (exclusive lower bin bound)
+    slot_hi: jax.Array     # int32 (inclusive upper bin bound)
+    slot_z: jax.Array      # float32
+    leaf_weight: jax.Array # (T, L) float32
+
+
+def build_path_pack(pf, *, need_cover: bool = True) -> PathPack:
+    """Extract merged path slots from a `PackedForest`.
+
+    ``need_cover=False`` (interventional SHAP: zero-fractions come from the
+    background rows, not from covers) accepts cover-less forests and fills
+    ``slot_z`` / ``leaf_weight`` with ones.
+    """
+    if pf.cover is None and need_cover:
+        raise ValueError(
+            "PackedForest has no per-node cover tensor — it was packed from "
+            "cover-less buffers (e.g. a format_version 1 checkpoint). "
+            "Path-dependent SHAP and cover importances need a forest trained "
+            "and checkpointed by this version; interventional SHAP "
+            "(algorithm='interventional', background=...) still works.")
+    depth, n_leaves = pf.depth, pf.n_leaves
+    feat = np.asarray(pf.feat)                    # (T, 2^D - 1)
+    thr = np.asarray(pf.thr).astype(np.int64)
+    cover = (np.ones((pf.n_trees, 2 * n_leaves - 1)) if pf.cover is None
+             else np.asarray(pf.cover, dtype=np.float64))
+
+    lvl = np.arange(depth)                        # (D,)
+    ell = np.arange(n_leaves)[:, None]            # (L, 1)
+    pos = ell >> (depth - lvl)                    # (L, D) in-level position
+    heap = pos + (2 ** lvl - 1)                   # internal node id per edge
+    bit = (ell >> (depth - lvl - 1)) & 1          # 0 = left, 1 = right
+    child_pos = 2 * pos + bit
+    child = np.where(lvl + 1 < depth,
+                     child_pos + (2 ** (lvl + 1) - 1),
+                     (n_leaves - 1) + ell)        # global child node id
+
+    feat_e = feat[:, heap]                        # (T, L, D)
+    thr_e = thr[:, heap]
+    c_par = cover[:, heap]
+    c_ch = cover[:, child]
+    z_e = np.where(c_par > 0, c_ch / np.where(c_par > 0, c_par, 1.0), 0.0)
+    lo_e = np.where(bit == 0, -1, thr_e)          # left: code <= thr
+    hi_e = np.where(bit == 0, thr_e, BIG_BIN)     # right: code > thr
+
+    # Merge duplicate features into the slot of their first occurrence:
+    # z multiplies, intervals intersect; non-first levels become padding.
+    same = feat_e[:, :, :, None] == feat_e[:, :, None, :]   # (T, L, D, D)
+    first = np.argmax(same, axis=3)               # first level with this feat
+    group = first[:, :, None, :] == lvl[None, None, :, None]  # slot <- level
+    is_first = first == lvl[None, None, :]
+    z_slot = np.prod(np.where(group, z_e[:, :, None, :], 1.0), axis=3)
+    lo_slot = np.max(np.where(group, lo_e[:, :, None, :], -1), axis=3)
+    hi_slot = np.min(np.where(group, hi_e[:, :, None, :], BIG_BIN), axis=3)
+
+    slot_feat = np.where(is_first, feat_e, -1).astype(np.int32)
+    slot_lo = np.where(is_first, lo_slot, -1).astype(np.int32)
+    slot_hi = np.where(is_first, hi_slot, BIG_BIN).astype(np.int32)
+    slot_z = np.where(is_first, z_slot, 1.0).astype(np.float32)
+    leaf_weight = np.prod(slot_z, axis=2, dtype=np.float64)
+
+    return PathPack(slot_feat=jnp.asarray(slot_feat),
+                    slot_lo=jnp.asarray(slot_lo),
+                    slot_hi=jnp.asarray(slot_hi),
+                    slot_z=jnp.asarray(slot_z),
+                    leaf_weight=jnp.asarray(leaf_weight.astype(np.float32)))
