@@ -10,6 +10,8 @@ vs one-vs-all, time vs d) are the reproduction targets.
   fig1     time vs output dimension d                     (paper Fig. 1/4)
   fig3     learning curves full vs sketch                 (paper Fig. 3)
   rounds   boosting rounds to convergence                 (paper Table 13)
+  hist     histogram-engine microbench: direct vs partitioned vs sibling
+           subtraction per tree depth                     (-> BENCH_hist.json)
   predict  packed-forest inference baseline               (-> BENCH_predict.json)
   shap     TreeSHAP explanation-serving baseline          (-> BENCH_shap.json)
   kernels  Pallas kernel vs jnp oracle timings (CPU interpret; structural)
@@ -128,6 +130,124 @@ def bench_rounds(scale) -> List[Dict]:
     return rows
 
 
+HIST_QUICK = dict(n=24000, m=20, d=16, bins=64)
+HIST_FULL = dict(n=120000, m=40, d=18, bins=256)
+HIST_SMOKE = dict(n=2000, m=8, d=6, bins=32)
+
+
+def bench_hist(scale) -> List[Dict]:
+    """Histogram-engine microbench: per-level split-search cost of
+    ``direct`` (full rebuild over all nodes) vs ``partition`` (node-sorted
+    row tiles, O(n*m*c) per level) vs ``subtract`` (partition + sibling
+    subtraction, ~half the scatter work) across sketch widths and depths.
+
+    Times one whole `tree.grow_tree` per engine (warm, best of 3) — split
+    scan and routing are identical across engines, so the delta isolates
+    the histogram builder — and derives the per-level mean.  The acceptance
+    guards run inline: all three engines must pick identical (feat, thr)
+    per node on the bench seed, and the deepest level's subtraction
+    histograms must match the direct build within the documented fp32
+    tolerance.  `BENCH_hist.json` at the repo root is the standing
+    baseline: diff ``time_s`` / ``per_level_ms`` across PRs.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import histogram as H
+    from repro.core import tree as T
+    from repro.core.histogram import resolve_kernel_mode
+
+    sc = (HIST_FULL if scale is FULL else
+          HIST_SMOKE if scale is SMOKE else HIST_QUICK)
+    mode = resolve_kernel_mode(True)
+    n, m, d, bins = sc["n"], sc["m"], sc["d"], sc["bins"]
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, bins, (n, m)).astype(np.uint8))
+    G_full = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    Hd = jnp.ones((n, d), jnp.float32)
+    ones = jnp.ones((n, 1), jnp.float32)
+
+    rows: List[Dict] = []
+    for k_label, k in ((2, 2), (5, 5), ("full", d)):
+        stats = jnp.concatenate([G_full[:, :k], ones], axis=1)
+        for depth in (3, 6):
+            grown = {}
+            for engine in ("direct", "partition", "subtract"):
+                def fit():
+                    tr, _ = T.grow_tree(codes, stats, G_full, Hd,
+                                        depth=depth, n_bins=bins, lam=1.0,
+                                        use_kernel=mode, hist_engine=engine)
+                    return tr
+                t0 = time.perf_counter()
+                tree = fit()
+                jax.block_until_ready(tree.value)
+                cold = time.perf_counter() - t0
+                warm = np.inf               # best-of-3: robust to CPU noise
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    tree = fit()
+                    jax.block_until_ready(tree.value)
+                    warm = min(warm, time.perf_counter() - t0)
+                grown[engine] = tree
+                rows.append({
+                    "sketch_k": k_label, "depth": depth, "engine": engine,
+                    "n": n, "m": m, "bins": bins,
+                    "cold_time_s": round(cold, 4),
+                    "time_s": round(warm, 4),
+                    "per_level_ms": round(warm / depth * 1e3, 2),
+                })
+                print(f"  hist k={k_label} depth={depth} {engine}: "
+                      f"{warm:.4f}s ({rows[-1]['per_level_ms']}ms/level)",
+                      flush=True)
+            # Acceptance guards: identical split decisions across engines...
+            for engine in ("partition", "subtract"):
+                assert np.array_equal(np.asarray(grown["direct"].feat),
+                                      np.asarray(grown[engine].feat)), engine
+                assert np.array_equal(np.asarray(grown["direct"].thr),
+                                      np.asarray(grown[engine].thr)), engine
+            # ...and bounded subtraction drift on the deepest level's
+            # histograms (replayed through the jnp builders).
+            if depth == 6:
+                state = H.init_level_state(n)
+                node_pos = jnp.zeros((n,), jnp.int32)
+                tree = grown["direct"]
+                for lvl in range(depth - 1):
+                    off = 2 ** lvl - 1
+                    nn = 2 ** lvl
+                    bits = T.route_bits(codes, node_pos,
+                                        tree.feat[off:off + nn],
+                                        tree.thr[off:off + nn])
+                    node_pos = node_pos * 2 + bits
+                    state = H.advance_level_state(state, bits)
+                nn = 2 ** (depth - 1)
+                direct = H.build_histograms_jnp(codes, node_pos, stats,
+                                                n_nodes=nn, n_bins=bins)
+                prev = H.build_histograms_jnp(codes, node_pos // 2, stats,
+                                              n_nodes=nn // 2, n_bins=bins)
+                sub = H.build_level_jnp(codes, stats, state, prev,
+                                        n_nodes=nn, n_bins=bins,
+                                        subtract=True)
+                drift = float(jnp.max(jnp.abs(sub - direct)))
+                scale_ref = float(jnp.max(jnp.abs(direct)))
+                assert drift <= max(1e-3 * scale_ref, 1e-3), (drift,
+                                                              scale_ref)
+                rows[-1]["subtract_max_drift"] = drift
+
+    payload = {
+        "bench": "hist_engine",
+        "backend": jax.default_backend(),
+        "kernel_mode": mode,
+        "scale": sc,
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_hist.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:hist] wrote {os.path.join(root, 'BENCH_hist.json')}",
+          flush=True)
+    return rows
+
+
 GBDT_QUICK = dict(n=4000, m=20, d=6, trees=40, depth=5, bins=64)
 GBDT_FULL = dict(n=40000, m=60, d=16, trees=200, depth=6, bins=256)
 
@@ -152,38 +272,53 @@ def bench_gbdt(scale) -> List[Dict]:
     Xtr, Xte, ytr, yte = train_test_split(X, y, seed=0)
 
     rows: List[Dict] = []
+
+    def run_one(strategy, k_label, method, k, loop, depth, engine):
+        cfg = GBDTConfig(loss="multiclass", strategy=strategy,
+                         sketch_method=method, sketch_k=k,
+                         n_trees=sc["trees"], depth=depth,
+                         n_bins=sc["bins"], learning_rate=0.1,
+                         loop=loop, hist_engine=engine, seed=0)
+        t0 = time.perf_counter()
+        SketchBoost(cfg).fit(Xtr, ytr)           # cold: includes tracing
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        model = SketchBoost(cfg).fit(Xtr, ytr)   # warm: jit cache hit
+        jax.block_until_ready(model.forest.value)
+        dt = time.perf_counter() - t0
+        traj = [round(r["train_time_s"], 3)
+                for r in model.history if r["round"] % 10 == 0]
+        rows.append({
+            "strategy": strategy, "sketch_k": k_label,
+            "method": method, "loop": loop, "depth": depth,
+            "hist_engine": model.cfg.hist_engine,
+            "rounds": int(model.forest.n_trees),
+            "cold_fit_time_s": round(cold, 3),
+            "fit_time_s": round(dt, 3),
+            "rounds_per_sec": round(model.forest.n_trees / dt, 3),
+            "test_loss": round(model.eval_loss(Xte, yte), 5),
+            "trajectory_s": traj,
+        })
+        print(f"  gbdt {strategy} k={k_label} {loop} depth={depth} "
+              f"{rows[-1]['hist_engine']}: "
+              f"{rows[-1]['rounds_per_sec']} rounds/s "
+              f"({rows[-1]['fit_time_s']}s)", flush=True)
+
     for strategy in ("single_tree", "one_vs_all"):
         for k_label, method, k in ((2, "random_projection", 2),
                                    (5, "random_projection", 5),
                                    ("full", "none", 0)):
             for loop in ("scan", "python"):
-                cfg = GBDTConfig(loss="multiclass", strategy=strategy,
-                                 sketch_method=method, sketch_k=k,
-                                 n_trees=sc["trees"], depth=sc["depth"],
-                                 n_bins=sc["bins"], learning_rate=0.1,
-                                 loop=loop, seed=0)
-                t0 = time.perf_counter()
-                SketchBoost(cfg).fit(Xtr, ytr)       # cold: includes tracing
-                cold = time.perf_counter() - t0
-                t0 = time.perf_counter()
-                model = SketchBoost(cfg).fit(Xtr, ytr)   # warm: jit cache hit
-                jax.block_until_ready(model.forest.value)
-                dt = time.perf_counter() - t0
-                traj = [round(r["train_time_s"], 3)
-                        for r in model.history if r["round"] % 10 == 0]
-                rows.append({
-                    "strategy": strategy, "sketch_k": k_label,
-                    "method": method, "loop": loop,
-                    "rounds": int(model.forest.n_trees),
-                    "cold_fit_time_s": round(cold, 3),
-                    "fit_time_s": round(dt, 3),
-                    "rounds_per_sec": round(model.forest.n_trees / dt, 3),
-                    "test_loss": round(model.eval_loss(Xte, yte), 5),
-                    "trajectory_s": traj,
-                })
-                print(f"  gbdt {strategy} k={k_label} {loop}: "
-                      f"{rows[-1]['rounds_per_sec']} rounds/s "
-                      f"({rows[-1]['fit_time_s']}s)", flush=True)
+                run_one(strategy, k_label, method, k, loop, sc["depth"],
+                        "auto")
+    # Engine comparison rows at depth 6 — where the direct builder's
+    # O(n*m*c*2^l) per-level blow-up is largest; diff these pairs to see
+    # the node-partitioned + sibling-subtraction win end to end.
+    for strategy, k_label, method, k in (
+            ("single_tree", 5, "random_projection", 5),
+            ("one_vs_all", "full", "none", 0)):
+        for engine in ("auto", "direct"):
+            run_one(strategy, k_label, method, k, "scan", 6, engine)
 
     payload = {
         "bench": "gbdt_compiled_loop",
@@ -488,6 +623,7 @@ def bench_compression() -> List[Dict]:
 
 BENCHES = {
     "gbdt": lambda sc: bench_gbdt(sc),
+    "hist": lambda sc: bench_hist(sc),
     "predict": lambda sc: bench_predict(sc),
     "shap": lambda sc: bench_shap(sc),
     "table1": lambda sc: bench_table1(sc),

@@ -66,6 +66,9 @@ class GBDTConfig:
     eval_every: int = 1
     use_kernel: Any = True               # True=auto: Pallas on TPU, jnp off-TPU;
                                          # or explicit "jnp"/"pallas"/"interpret"
+    hist_engine: str = "auto"            # "auto"=subtract: partitioned rows +
+                                         # sibling subtraction; or explicit
+                                         # "direct"/"partition"/"subtract"
     loop: str = "scan"                   # "scan" (compiled rounds) | "python"
     scan_chunk: int = 32                 # rounds per scan segment (host boundary)
     predict_row_chunk: int = 65536       # rows per predict dispatch (0 = all)
@@ -77,7 +80,8 @@ class GBDTConfig:
         mode is part of every static cache key)."""
         return dataclasses.replace(
             self, n_outputs=d,
-            use_kernel=H.resolve_kernel_mode(self.use_kernel))
+            use_kernel=H.resolve_kernel_mode(self.use_kernel),
+            hist_engine=H.resolve_hist_engine(self.hist_engine))
 
 
 def _sample_weights(key: jax.Array, G: jax.Array, cfg: GBDTConfig) -> jax.Array:
@@ -127,7 +131,8 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
                               n_bins=cfg.n_bins, lam=cfg.lambda_l2,
                               min_data_in_leaf=cfg.min_data_in_leaf,
                               min_gain=cfg.min_gain, feature_mask=fmask,
-                              use_kernel=cfg.use_kernel)
+                              use_kernel=cfg.use_kernel,
+                              hist_engine=cfg.hist_engine)
         F = F + cfg.learning_rate * tree.value[
             T.tree_leaf_index(tree.feat, tree.thr, codes, depth=cfg.depth)]
         return F, tree
@@ -142,7 +147,8 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
                             lam=cfg.lambda_l2,
                             min_data_in_leaf=cfg.min_data_in_leaf,
                             min_gain=cfg.min_gain, feature_mask=fmask,
-                            use_kernel=cfg.use_kernel)
+                            use_kernel=cfg.use_kernel,
+                            hist_engine=cfg.hist_engine)
         return tr
 
     trees = jax.vmap(grow_one, in_axes=(1, 1))(G, Hd)      # Tree with (d, ...) axes

@@ -11,7 +11,14 @@ Collective structure per boosting round:
   2. sketch G_k = G @ Pi — local matmul + psum(model): the paper's technique *is*
      the gradient-compression collective; split search becomes replicated-cheap.
   3. histograms          — psum over ("pod", "data"); bytes ~ nodes*m*B*(k+1),
-     i.e. d/k times smaller than an unsketched single-tree round.
+     i.e. d/k times smaller than an unsketched single-tree round.  Under the
+     sibling-subtraction engine (``cfg.hist_engine`` "auto"/"subtract") each
+     shard accumulates only the globally-smaller child of every parent into a
+     compact ``(n_nodes/2, ...)`` buffer, the psum moves HALF the bytes, and
+     every shard derives the sibling as ``parent − built`` from the
+     replicated previous-level histograms it carries — the smaller-side
+     choice uses psummed global row counts so all shards partition
+     identically.
   4. split search        — replicated (or feature-sharded: local argmax +
      all_gather of per-node winners over "model").
   5. leaf values         — segment-sum on the *full* sharded gradients, psum over
@@ -117,6 +124,10 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
     f_spec = P(row_axes, model_axis)
     y_spec = row_spec if cfg.loss == "multiclass" else f_spec
     val_spec = P(None, model_axis)
+    # "partition" has no meaning without the tiles kernel (the shard-local
+    # build is a plain segment-sum either way) — only subtraction changes the
+    # collective structure here.
+    subtract_engine = H.resolve_hist_engine(cfg.hist_engine) == "subtract"
 
     def local_step(F_l, codes_l, Y_l, key):
         n_loc, d_loc = F_l.shape
@@ -144,12 +155,36 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
         else:
             codes_h = codes_l
 
+        prev_hist = None                 # replicated previous-level histograms
         for lvl in range(cfg.depth):
             n_nodes = 2 ** lvl
-            hist = H.build_histograms_jnp(codes_h, node_pos, stats,
-                                          n_nodes=n_nodes, n_bins=cfg.n_bins)
-            for ax in row_axes:
-                hist = jax.lax.psum(hist, ax)
+            if subtract_engine and lvl > 0:
+                # Globally-consistent smaller-child choice: psum the per-node
+                # row counts (2^l scalars — negligible next to histograms).
+                loc_counts = jax.ops.segment_sum(
+                    jnp.ones((n_loc,), jnp.float32), node_pos,
+                    num_segments=n_nodes)
+                for ax in row_axes:
+                    loc_counts = jax.lax.psum(loc_counts, ax)
+                side, is_built = H.smaller_children(loc_counts)
+                # Build ONLY the smaller children, compacted to parent index:
+                # rows of the larger child are masked to zero stats, so the
+                # psummed buffer is half the bytes of a full level.
+                stats_b = stats * is_built[node_pos][:, None].astype(
+                    jnp.float32)
+                built = H.build_histograms_jnp(codes_h, node_pos // 2, stats_b,
+                                               n_nodes=n_nodes // 2,
+                                               n_bins=cfg.n_bins)
+                for ax in row_axes:
+                    built = jax.lax.psum(built, ax)       # half-size psum
+                hist = H.interleave_children(side, built, prev_hist - built)
+            else:
+                hist = H.build_histograms_jnp(codes_h, node_pos, stats,
+                                              n_nodes=n_nodes,
+                                              n_bins=cfg.n_bins)
+                for ax in row_axes:
+                    hist = jax.lax.psum(hist, ax)
+            prev_hist = hist
             gain = S.split_scores(hist, lam, min_data)
             sp = S.best_splits(gain, jnp.float32(cfg.min_gain))
             if feature_shard:

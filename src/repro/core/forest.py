@@ -217,11 +217,11 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
     Pallas kernel on TPU and the same gather walk elsewhere.  Accumulation
     is tree-by-tree in both modes, so results are bit-identical across them.
     """
-    mode = H.resolve_kernel_mode(mode)
+    from repro.kernels import ops as kops
+    mode, interp = kops.resolve_dispatch(mode)
     if mode != "jnp":
-        from repro.kernels import ops as kops
         return kops.forest_apply(F_init, codes, feat, thr, leaf, out_col, lr,
-                                 depth=depth, interpret=(mode == "interpret"))
+                                 depth=depth, interpret=interp)
     from repro.kernels import ref
     return ref.forest_apply_ref(F_init, codes, feat, thr, leaf, out_col,
                                 jnp.float32(lr), depth=depth)

@@ -1,20 +1,37 @@
 """Gradient histogram accumulation over (node, feature, bin) cells.
 
-This is the GBDT hot spot (Sec. 3.4: O(n * m * k) per tree level).  The public
-entry point ``build_histograms`` dispatches to the Pallas TPU kernel
-(`repro.kernels.hist_kernel`) when requested / available and to the pure-jnp
-segment-sum path otherwise.  Both produce identical ``(nodes, m, bins, c)`` tensors
-(c = sketch dim + 1 count channel, or 2d for the leaf-value pass).
+This is the GBDT hot spot (Sec. 3.4: O(n * m * k) per tree level).  Two
+builder generations live here:
+
+  * the **direct** builder (``build_histograms`` / ``build_histograms_jnp``)
+    scatters every row into the full ``(n_nodes, m, n_bins, c)`` cell space
+    each level — simple, but the Pallas kernel's one-hot space grows with
+    ``n_nodes`` so per-level FLOPs scale O(n * m * c * 2^l);
+  * the **node-partitioned level engine** (`LevelState` + `build_level_jnp`
+    and its fused Pallas twin `kernels.ops.histogram_splits_level`): the
+    grower carries a stable permutation of rows sorted by node (incremental
+    per-level radix partition, fixed shapes) so histogram work touches an
+    ``n_bins``-wide one-hot space per row tile — O(n * m * c) per level —
+    and the **sibling-subtraction** variant builds only the smaller child of
+    each parent directly, deriving the other as ``parent − built`` from the
+    loop-carried previous-level histograms (halving the remaining scatter
+    work; fp32 drift is bounded and asserted by the parity tests).
+
+``resolve_hist_engine`` normalises the engine request; `core.tree.grow_tree`
+threads the chosen engine through both the jnp and Pallas branches.
 """
 from __future__ import annotations
 
 import functools
 import os
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 KERNEL_MODES = ("jnp", "pallas", "interpret")
+
+HIST_ENGINES = ("direct", "partition", "subtract")
 
 
 def resolve_kernel_mode(use_kernel) -> str:
@@ -40,10 +57,28 @@ def resolve_kernel_mode(use_kernel) -> str:
     return use_kernel
 
 
+def resolve_hist_engine(engine) -> str:
+    """Normalize a histogram-engine request into one of ``HIST_ENGINES``.
+
+    ``"auto"`` (the default everywhere) resolves to ``"subtract"`` — the
+    partitioned builder plus sibling subtraction, the fastest engine on
+    every backend.  ``"partition"`` is the partitioned builder without
+    subtraction (useful to isolate the two effects in benchmarks);
+    ``"direct"`` is the legacy full-rebuild path kept as the exact
+    reference.
+    """
+    if engine in (None, "auto"):
+        return "subtract"
+    if engine not in HIST_ENGINES:
+        raise ValueError(f"unknown hist engine {engine!r}; "
+                         f"expected 'auto' or one of {HIST_ENGINES}")
+    return engine
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
 def build_histograms_jnp(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
                          *, n_nodes: int, n_bins: int) -> jax.Array:
-    """Pure-jnp histogram builder (also the Pallas oracle).
+    """Pure-jnp direct histogram builder (also the Pallas oracle).
 
     Args:
       codes:    (n, m) uint8/int feature bin codes.
@@ -69,22 +104,171 @@ def build_histograms_jnp(codes: jax.Array, node_pos: jax.Array, stats: jax.Array
 def build_histograms(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
                      *, n_nodes: int, n_bins: int, use_kernel=False,
                      interpret: bool | None = None) -> jax.Array:
-    """Dispatching builder.  ``use_kernel`` is a bool or a mode string (see
-    `resolve_kernel_mode`): ``"pallas"`` runs the compiled Mosaic kernel (TPU),
-    ``"interpret"`` the Pallas interpreter, ``"jnp"`` the segment-sum path —
-    the reference implementation, which XLA fuses well on CPU."""
-    mode = resolve_kernel_mode(use_kernel)
-    # Legacy explicit override: a True `interpret` with any kernel request
-    # (even one that auto-resolved to the jnp fallback) runs the Pallas
-    # interpreter; `interpret=False` forces the compiled kernel.
-    if interpret is not None and use_kernel not in (False, "jnp"):
-        mode = "interpret" if interpret else "pallas"
+    """Dispatching direct builder.  ``use_kernel`` is a bool or a mode string
+    and ``interpret`` the legacy explicit override — both resolved by the
+    shared `kernels.ops.resolve_dispatch` helper (the same resolution the
+    fused split search, forest traversal, and TreeSHAP entry points use):
+    ``"pallas"`` runs the compiled Mosaic kernel (TPU), ``"interpret"`` the
+    Pallas interpreter, ``"jnp"`` the segment-sum path — the reference
+    implementation, which XLA fuses well on CPU."""
+    from repro.kernels import ops as kops
+    mode, interp = kops.resolve_dispatch(use_kernel, interpret)
     if mode != "jnp":
-        from repro.kernels import ops as kops
         return kops.histogram(codes, node_pos, stats, n_nodes=n_nodes,
-                              n_bins=n_bins, interpret=(mode == "interpret"))
+                              n_bins=n_bins, interpret=interp)
     return build_histograms_jnp(codes, node_pos, stats, n_nodes=n_nodes,
                                 n_bins=n_bins)
+
+
+# ---------------------------------------------------------------------------
+# Node-partitioned level state: rows kept sorted by node across levels.
+# ---------------------------------------------------------------------------
+
+class LevelState(NamedTuple):
+    """Loop-carried row partition for one tree level.
+
+    ``order`` is a permutation of ``[0, n)`` such that ``node_perm[i]`` (the
+    node of row ``order[i]``) is non-decreasing — rows of each node form one
+    contiguous block whose extent is ``counts`` (exclusive-cumsum gives the
+    block starts).  The partition is advanced one level at a time by
+    `advance_level_state`, a *stable* in-segment 1-bit radix step, so row
+    order within a node is the original dataset order — summation order
+    (and therefore fp32 histogram bits) is reproducible run to run.
+    """
+    order: jax.Array      # (n,) int32 row permutation, sorted by node
+    node_perm: jax.Array  # (n,) int32 node of order[i] (non-decreasing)
+    counts: jax.Array     # (n_nodes,) int32 rows per node
+
+
+def init_level_state(n: int) -> LevelState:
+    """Level-0 partition: every row in the root node, identity order."""
+    return LevelState(order=jnp.arange(n, dtype=jnp.int32),
+                      node_perm=jnp.zeros((n,), jnp.int32),
+                      counts=jnp.full((1,), n, jnp.int32))
+
+
+@jax.jit
+def advance_level_state(state: LevelState, go_right: jax.Array) -> LevelState:
+    """Advance the partition one level: parent ``p`` -> children ``2p, 2p+1``.
+
+    ``go_right`` is the per-row routing bit in ORIGINAL row order (as
+    produced by the split just found).  The update is an O(n) stable radix
+    partition with fixed shapes: within each parent segment, left-routed
+    rows keep their relative order and land in child ``2p``, right-routed
+    rows in ``2p+1``.
+    """
+    n = state.order.shape[0]
+    n_nodes = state.counts.shape[0]
+    bit = go_right.astype(jnp.int32)[state.order]           # permuted order
+    parent = state.node_perm
+    starts = jnp.cumsum(state.counts) - state.counts        # excl cumsum
+
+    left_counts = jax.ops.segment_sum((1 - bit).astype(jnp.int32), parent,
+                                      num_segments=n_nodes,
+                                      indices_are_sorted=True)
+    counts_new = jnp.stack([left_counts, state.counts - left_counts],
+                           axis=1).reshape(-1)              # (2*n_nodes,)
+    starts_new = jnp.cumsum(counts_new) - counts_new
+
+    # Stable in-segment ranks from one global exclusive cumsum of the bit.
+    pre_left = jnp.cumsum(1 - bit) - (1 - bit)              # lefts before i
+    seg_start = starts[parent]
+    lefts_in_seg = pre_left - jnp.take(pre_left, seg_start)
+    offset_in_seg = jnp.arange(n, dtype=jnp.int32) - seg_start
+    rank = jnp.where(bit == 0, lefts_in_seg, offset_in_seg - lefts_in_seg)
+    child = 2 * parent + bit
+    dest = jnp.take(starts_new, child) + rank               # a permutation
+
+    order_new = jnp.zeros((n,), jnp.int32).at[dest].set(state.order)
+    node_new = jnp.zeros((n,), jnp.int32).at[dest].set(child)
+    return LevelState(order=order_new, node_perm=node_new, counts=counts_new)
+
+
+def smaller_children(counts: jax.Array):
+    """Per-parent smaller-child selection for sibling subtraction.
+
+    Args:
+      counts: (n_nodes,) per-node row counts at the current level.
+    Returns:
+      ``(side, is_built)`` — ``side[p]`` in {0, 1} is the smaller child of
+      parent ``p`` (ties -> left, so the choice is deterministic), and
+      ``is_built[c]`` marks the child nodes built directly; the sibling is
+      derived as ``parent − built``.
+    """
+    n_nodes = counts.shape[0]
+    side = (counts[0::2] > counts[1::2]).astype(jnp.int32)  # 1: left bigger
+    child = jnp.arange(n_nodes, dtype=jnp.int32)
+    is_built = (child % 2) == side[child // 2]
+    return side, is_built
+
+
+def interleave_children(side: jax.Array, built4: jax.Array,
+                        sib4: jax.Array) -> jax.Array:
+    """(P, ...) built/derived sibling pairs -> (2P, ...) child-ordered.
+
+    The one place the built-vs-derived placement rule lives: child ``2p``
+    is the built histogram iff ``side[p] == 0``.  Shared by the jnp engine,
+    the fused Pallas wrapper (`kernels.ops.histogram_splits_level`), and
+    the distributed grower so the three can never disagree.
+    """
+    P = built4.shape[0]
+    s = side.reshape((P,) + (1,) * (built4.ndim - 1))
+    left = jnp.where(s == 0, built4, sib4)
+    right = jnp.where(s == 0, sib4, built4)
+    return jnp.stack([left, right], axis=1).reshape((2 * P,) + built4.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "subtract"))
+def build_level_jnp(codes: jax.Array, stats: jax.Array, state: LevelState,
+                    prev_hist: Optional[jax.Array], *, n_nodes: int,
+                    n_bins: int, subtract: bool) -> jax.Array:
+    """jnp reference path of the partitioned level engine.
+
+    Builds the ``(n_nodes, m, n_bins, c)`` histograms of one level from the
+    partition state.  With ``subtract=True`` (level > 0) only the smaller
+    child of each parent is accumulated — over a fixed-size ``n // 2`` row
+    buffer gathered from the contiguous child segments — and the sibling is
+    derived from ``prev_hist`` (the previous level's histograms).
+    """
+    n, m = codes.shape
+    B = n_bins
+    if not subtract:
+        # Partitioned build of every node: segment-sum over rows in
+        # partition order (node-major segment ids).
+        ri = state.order
+        seg_base = state.node_perm * B
+
+        def per_feature(col):
+            return jax.ops.segment_sum(stats[ri], seg_base + col[ri],
+                                       num_segments=n_nodes * B)
+
+        hist = jax.vmap(per_feature, in_axes=1)(codes.astype(jnp.int32))
+        return hist.reshape(m, n_nodes, B, -1).transpose(1, 0, 2, 3)
+
+    P = n_nodes // 2
+    side, _ = smaller_children(state.counts)
+    n_build = max(n // 2, 1)                    # sum of smaller halves <= n/2
+    # Compact the built-children rows into the fixed buffer: rows of node c
+    # are contiguous in partition order, so a mask + exclusive cumsum gives
+    # each built row its destination slot.
+    mask = (state.node_perm % 2) == side[state.node_perm // 2]
+    dest = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+    gather = jnp.full((n_build,), n, jnp.int32).at[
+        jnp.where(mask, dest, n_build)].set(jnp.arange(n, dtype=jnp.int32),
+                                            mode="drop")
+    valid = gather < n
+    ri = state.order[jnp.minimum(gather, n - 1)]
+    p_g = jnp.where(valid, state.node_perm[jnp.minimum(gather, n - 1)] // 2, 0)
+    stats_g = stats[ri] * valid[:, None].astype(stats.dtype)
+
+    def per_feature(col):
+        return jax.ops.segment_sum(stats_g, p_g * B + col[ri],
+                                   num_segments=P * B)
+
+    built = jax.vmap(per_feature, in_axes=1)(codes.astype(jnp.int32))
+    built4 = built.reshape(m, P, B, -1).transpose(1, 0, 2, 3)  # (P, m, B, c)
+    sib4 = prev_hist - built4
+    return interleave_children(side, built4, sib4)
 
 
 @functools.partial(jax.jit, static_argnames=("n_leaves",))

@@ -33,24 +33,29 @@ class Tree(NamedTuple):
         return (self.feat.shape[0] + 1).bit_length() - 1
 
 
-def route_level(codes: jax.Array, node_pos: jax.Array, feat: jax.Array,
-                thr: jax.Array) -> jax.Array:
-    """Advance every sample one level: ``pos <- 2*pos + [code > thr]``."""
+def route_bits(codes: jax.Array, node_pos: jax.Array, feat: jax.Array,
+               thr: jax.Array) -> jax.Array:
+    """Per-sample routing bit at the current level: ``[code > thr]``."""
     n = codes.shape[0]
     f = feat[node_pos]                                    # (n,)
     code = codes[jnp.arange(n), f].astype(jnp.int32)
-    go_right = (code > thr[node_pos]).astype(jnp.int32)
-    return node_pos * 2 + go_right
+    return (code > thr[node_pos]).astype(jnp.int32)
+
+
+def route_level(codes: jax.Array, node_pos: jax.Array, feat: jax.Array,
+                thr: jax.Array) -> jax.Array:
+    """Advance every sample one level: ``pos <- 2*pos + [code > thr]``."""
+    return node_pos * 2 + route_bits(codes, node_pos, feat, thr)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "n_bins", "use_kernel"))
+    static_argnames=("depth", "n_bins", "use_kernel", "hist_engine"))
 def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Array,
               *, depth: int, n_bins: int, lam: float,
               min_data_in_leaf: float = 1.0, min_gain: float = 0.0,
               feature_mask: Optional[jax.Array] = None,
-              use_kernel=False):
+              use_kernel=False, hist_engine="auto"):
     """Grow one multivariate tree (single-device path).
 
     Args:
@@ -62,11 +67,19 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
                Kernel modes run the fused Pallas histogram + split-scan pair per
                level; the jnp mode builds histograms with segment-sum and scans
                them with `split.split_scores` / `split.best_splits`.
+      hist_engine: histogram engine (see `histogram.resolve_hist_engine`):
+               ``"auto"``/``"subtract"`` carries a node-sorted row partition
+               (`histogram.LevelState`) plus the previous level's histograms
+               through the level loop, builds only the smaller child of each
+               parent and derives the sibling by subtraction; ``"partition"``
+               partitions without subtraction; ``"direct"`` is the legacy
+               full-rebuild path.
     Returns:
       (Tree, leaf_pos) where leaf_pos is the (n,) leaf index of each sample.
     """
     n, m = codes.shape
     mode = H.resolve_kernel_mode(use_kernel)
+    engine = H.resolve_hist_engine(hist_engine)
     lam = jnp.float32(lam)
     min_data = jnp.float32(min_data_in_leaf)
     min_gain_ = jnp.float32(min_gain)
@@ -76,26 +89,44 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
     heap_gain = jnp.zeros((2 ** depth - 1,), jnp.float32)
 
     node_pos = jnp.zeros((n,), jnp.int32)
+    state = H.init_level_state(n) if engine != "direct" else None
+    prev_hist = None                       # previous level's histograms
     for lvl in range(depth):
         n_nodes = 2 ** lvl
+        subtract = engine == "subtract" and lvl > 0
         if mode != "jnp":
             from repro.kernels import ops as kops
-            best_gain, best_idx = kops.histogram_splits(
-                codes, node_pos, stats, lam, min_data, feature_mask,
-                n_nodes=n_nodes, n_bins=n_bins,
-                interpret=(mode == "interpret"))
+            interp = mode == "interpret"
+            if engine == "direct":
+                best_gain, best_idx = kops.histogram_splits(
+                    codes, node_pos, stats, lam, min_data, feature_mask,
+                    n_nodes=n_nodes, n_bins=n_bins, interpret=interp)
+            else:
+                best_gain, best_idx, prev_hist = kops.histogram_splits_level(
+                    codes, stats, state.order, state.counts, prev_hist,
+                    lam, min_data, feature_mask, n_nodes=n_nodes,
+                    n_bins=n_bins, subtract=subtract, interpret=interp)
             sp = S.splits_from_flat(best_gain, best_idx, n_bins=n_bins,
                                     min_gain=min_gain_)
         else:
-            hist = H.build_histograms_jnp(codes, node_pos, stats,
-                                          n_nodes=n_nodes, n_bins=n_bins)
+            if engine == "direct":
+                hist = H.build_histograms_jnp(codes, node_pos, stats,
+                                              n_nodes=n_nodes, n_bins=n_bins)
+            else:
+                hist = H.build_level_jnp(codes, stats, state, prev_hist,
+                                         n_nodes=n_nodes, n_bins=n_bins,
+                                         subtract=subtract)
+                prev_hist = hist
             gain = S.split_scores(hist, lam, min_data, feature_mask)
             sp = S.best_splits(gain, min_gain_)
         off = n_nodes - 1
         heap_feat = jax.lax.dynamic_update_slice(heap_feat, sp.feat, (off,))
         heap_thr = jax.lax.dynamic_update_slice(heap_thr, sp.thr, (off,))
         heap_gain = jax.lax.dynamic_update_slice(heap_gain, sp.gain, (off,))
-        node_pos = route_level(codes, node_pos, sp.feat, sp.thr)
+        bits = route_bits(codes, node_pos, sp.feat, sp.thr)
+        node_pos = node_pos * 2 + bits
+        if state is not None and lvl < depth - 1:
+            state = H.advance_level_state(state, bits)
 
     sample_w = stats[:, -1:]                              # SGB/GOSS weights
     g_sum, h_sum = H.leaf_sums(node_pos, G * sample_w, H_diag * sample_w,

@@ -51,12 +51,13 @@ def _phi_path_dependent(pf, pack: PathPack, codes: jax.Array,
                         mode: str) -> jax.Array:
     n, m = codes.shape
     d = pf.n_outputs
+    from repro.kernels import ops as kops
+    mode, interp = kops.resolve_dispatch(mode)
     if mode != "jnp":
-        from repro.kernels import ops as kops
         return kops.tree_shap(codes, pack.slot_feat, pack.slot_lo,
                               pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,
                               pf.lr, n_outputs=d, depth=pf.depth,
-                              interpret=(mode == "interpret"))
+                              interpret=interp)
     phi0 = jnp.zeros((n, m, d), jnp.float32)
     return ref.tree_shap_ref(phi0, codes, pack.slot_feat, pack.slot_lo,
                              pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,

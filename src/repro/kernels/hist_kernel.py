@@ -1,8 +1,11 @@
-"""Pallas TPU kernel: gradient histogram accumulation (the GBDT hot spot).
+"""Pallas TPU kernels: gradient histogram accumulation (the GBDT hot spot).
 
-TPU adaptation of Py-Boost's CUDA atomic scatter histograms: each grid step
-builds the one-hot matrix of the combined ``(node, bin)`` index for a row tile
-and contracts it with the statistics tile **on the MXU**:
+Two generations:
+
+**Direct kernel** (`histogram_pallas`) — TPU adaptation of Py-Boost's CUDA
+atomic scatter histograms: each grid step builds the one-hot matrix of the
+combined ``(node, bin)`` index for a row tile and contracts it with the
+statistics tile **on the MXU**:
 
     hist[f, nb_chunk] += onehot(node*B + bin_f - chunk_off)^T  @  stats_tile
                          (TN, NBC)                                (TN, C)
@@ -13,7 +16,23 @@ canonical Pallas accumulation pattern (zero-init at t==0).  VMEM working set per
 step: onehot (TN x NBC x 4B) + stats (TN x C) + out (NBC x C) — with the default
 TN=256, NBC=2048, C<=128 that is ~2.3 MB, comfortably inside 16 MB VMEM while
 keeping MXU-aligned contraction dims (TN multiple of 8, C padded to lanes by
-`ops.histogram`).
+`ops.histogram`).  Its one-hot space spans ``n_nodes * n_bins`` per row, so
+per-level FLOPs grow with the node count — O(n * m * c * 2^l) at level ``l``.
+
+**Partitioned tiles kernel** (`hist_tiles_pallas`) — the node-partitioned
+engine's hot loop.  `ops.histogram_splits_level` gathers rows into
+node-contiguous tiles (each tile belongs to exactly ONE node; per-node row
+ranges are padded to the tile size), so the one-hot space per row tile is
+only ``n_bins`` wide:
+
+    tile_hist[f, t] = onehot(bin_f)^T @ stats_tile     (TN, B)^T  (TN, C)
+
+Grid = (features, tiles); every output block is written exactly once (no
+revisit/accumulation pattern), and a cheap jnp epilogue segment-sums tiles
+into their nodes — the per-tile node-range bookkeeping that replaces the
+in-kernel node axis.  Per-level FLOPs are O(n * m * c) regardless of depth.
+VMEM per step: onehot (TN x B x 4B) + stats (TN x C) + out (B x C) — ~0.5 MB
+at TN=256, B=256, C=128.
 """
 from __future__ import annotations
 
@@ -78,3 +97,49 @@ def histogram_pallas(codes_t: jax.Array, node_pos: jax.Array, stats: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, nb_total, c), jnp.float32),
         interpret=interpret,
     )(codes_t, node_pos, stats)
+
+
+def _hist_tiles_kernel(codes_ref, stats_ref, out_ref, *, n_bins: int):
+    code = codes_ref[0, :].astype(jnp.int32)              # (TN,)
+    tn = code.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tn, n_bins), 1)
+    onehot = (code[:, None] == cols).astype(jnp.float32)  # (TN, B)
+    out_ref[0, 0] = jax.lax.dot_general(
+        onehot, stats_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (B, C)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "row_tile", "interpret"))
+def hist_tiles_pallas(codes_t: jax.Array, stats: jax.Array, *, n_bins: int,
+                      row_tile: int = 256, interpret: bool = True) -> jax.Array:
+    """Raw per-tile kernel entry (node-contiguous gathered inputs required —
+    use `ops.histogram_splits_level`).
+
+    Args:
+      codes_t: (m, S) transposed bin codes in partition order, S a multiple
+               of ``row_tile``; every tile of ``row_tile`` rows belongs to a
+               single tree node (padding rows carry zero stats).
+      stats:   (S, C) float32 statistics in the same order.
+    Returns:
+      (m, S // row_tile, n_bins, C) float32 per-tile histograms; the caller
+      segment-sums tiles into nodes (`ops._tiles_to_nodes`).
+    """
+    m, s = codes_t.shape
+    c = stats.shape[1]
+    assert s % row_tile == 0
+    n_tiles = s // row_tile
+    grid = (m, n_tiles)
+
+    return pl.pallas_call(
+        functools.partial(_hist_tiles_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, row_tile), lambda f, t: (f, t)),
+            pl.BlockSpec((row_tile, c), lambda f, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_bins, c), lambda f, t: (f, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_tiles, n_bins, c), jnp.float32),
+        interpret=interpret,
+    )(codes_t, stats)

@@ -14,11 +14,30 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.hist_kernel import histogram_pallas
+from repro.kernels.hist_kernel import hist_tiles_pallas, histogram_pallas
 from repro.kernels.predict_kernel import forest_traverse_pallas
 from repro.kernels.ref import SHAP_BIG_BIN as _SHAP_BIG
 from repro.kernels.shap_kernel import shap_pallas
 from repro.kernels.split_kernel import split_scan_pallas
+
+
+def resolve_dispatch(use_kernel, interpret: bool | None = None):
+    """Shared kernel-dispatch resolution: ``(mode, interpret_flag)``.
+
+    Every kernel-dispatching entry point — `core.histogram.build_histograms`,
+    the fused split search in `core.tree.grow_tree`, the forest traversal
+    (`core.forest.forest_apply`) and TreeSHAP (`explain.shap`) — resolves its
+    ``use_kernel`` request through this one helper so they can never drift.
+    ``interpret`` is the legacy explicit override: with any kernel request
+    (even one that auto-resolved to the jnp fallback), ``interpret=True``
+    forces the Pallas interpreter and ``interpret=False`` the compiled
+    Mosaic kernel.
+    """
+    from repro.core.histogram import resolve_kernel_mode
+    mode = resolve_kernel_mode(use_kernel)
+    if interpret is not None and use_kernel not in (False, "jnp"):
+        mode = "interpret" if interpret else "pallas"
+    return mode, mode == "interpret"
 
 
 def _resolve_lane_pad(lane_pad: int | None, interpret: bool) -> int:
@@ -134,6 +153,115 @@ def histogram_splits(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
                                   n_bins=n_bins, n_channels=c, m_tile=m_tile,
                                   lane_pad=lane_pad, interpret=interpret)
     return gain[:, 0], idx[:, 0]
+
+
+def _tile_plan(counts: jax.Array, build_counts: jax.Array, *, n: int,
+               n_tiles: int, row_tile: int):
+    """Node-contiguous tile layout for the partitioned histogram kernel.
+
+    Every node gets ``max(ceil(build_counts / row_tile), 1)`` tiles (one
+    all-padding tile keeps unbuilt/empty nodes' output blocks deterministic),
+    so each tile belongs to exactly one node.  Returns ``(tile_node,
+    src_perm, valid)``: the node of each tile, each row slot's index into the
+    *partition-ordered* row sequence, and the real-row mask (padding slots
+    carry zero stats).  All shapes are static; ``n_tiles`` must be
+    >= ``n_build // row_tile + 1 + n_nodes`` (the callers' static bound).
+    """
+    n_nodes = counts.shape[0]
+    starts = jnp.cumsum(counts) - counts
+    t_c = jnp.maximum((build_counts + row_tile - 1) // row_tile, 1)
+    tile_starts = jnp.cumsum(t_c) - t_c
+    tile_node = jnp.searchsorted(jnp.cumsum(t_c),
+                                 jnp.arange(n_tiles, dtype=jnp.int32),
+                                 side="right")
+    tile_node = jnp.minimum(tile_node, n_nodes - 1).astype(jnp.int32)
+    slot = jnp.arange(n_tiles * row_tile, dtype=jnp.int32)
+    t_of = slot // row_tile
+    node_of = tile_node[t_of]
+    pos_in_node = (t_of - tile_starts[node_of]) * row_tile + slot % row_tile
+    valid = pos_in_node < build_counts[node_of]
+    src_perm = jnp.minimum(starts[node_of] + pos_in_node, n - 1)
+    return tile_node, src_perm, valid
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "subtract",
+                                             "row_tile", "m_tile", "lane_pad",
+                                             "interpret"))
+def histogram_splits_level(codes: jax.Array, stats: jax.Array,
+                           order: jax.Array, counts: jax.Array,
+                           prev_hist: jax.Array | None,
+                           lam: jax.Array, min_data: jax.Array,
+                           feature_mask: jax.Array | None = None, *,
+                           n_nodes: int, n_bins: int, subtract: bool = False,
+                           row_tile: int = 256, m_tile: int = 8,
+                           lane_pad: int | None = None,
+                           interpret: bool = True):
+    """Fused partitioned hot path: tiles kernel -> sibling combine -> split scan.
+
+    The node-partitioned replacement for `histogram_splits`: rows are
+    gathered into node-contiguous tiles (`_tile_plan` over the grower's
+    loop-carried `core.histogram.LevelState` permutation), the per-tile
+    kernel contracts an ``n_bins``-wide one-hot space — O(n * m * c) per
+    level instead of O(n * m * c * 2^l) — and a jnp epilogue segment-sums
+    tiles into their nodes.  With ``subtract=True`` only the smaller child
+    of each parent is built (by row count; ties -> left) and the sibling is
+    derived as ``parent − built`` from ``prev_hist``, the previous level's
+    returned histograms — halving the tile work again and keeping the count
+    channel of the directly-built side exact.
+
+    Args:
+      codes: (n, m); stats: (n, c); order: (n,) partition permutation;
+      counts: (n_nodes,) per-node row counts; prev_hist: the previous
+      level's ``(m, (n_nodes // 2) * n_bins, C_pad)`` histograms (required
+      iff ``subtract``).
+    Returns:
+      ``(best_gain, best_idx, hist_native)`` — per-node split results as in
+      `split_scan` plus this level's lane-padded native histograms to carry.
+    """
+    from repro.core.histogram import interleave_children, smaller_children
+    n, m = codes.shape
+    c = stats.shape[1]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    b_pad = n_bins + (-n_bins) % 8               # sublane-aligned bin axis
+    if subtract:
+        P = n_nodes // 2
+        side, is_built = smaller_children(counts)
+        build_counts = jnp.where(is_built, counts, 0)
+        n_eff = n // 2                           # smaller halves sum <= n/2
+    else:
+        build_counts = counts
+        n_eff = n
+    n_tiles = n_eff // row_tile + 1 + n_nodes
+    tile_node, src_perm, valid = _tile_plan(counts, build_counts, n=n,
+                                            n_tiles=n_tiles,
+                                            row_tile=row_tile)
+    ri = order[src_perm]
+    codes_g = codes[ri].astype(jnp.int32)                  # (S, m)
+    stats_g = stats.astype(jnp.float32)[ri] * valid[:, None]
+    stats_g = _pad_to(stats_g, lane_pad, axis=1)
+    tiles = hist_tiles_pallas(codes_g.T, stats_g, n_bins=b_pad,
+                              row_tile=row_tile, interpret=interpret)
+    nodes4 = jax.ops.segment_sum(tiles.transpose(1, 0, 2, 3), tile_node,
+                                 num_segments=n_nodes,
+                                 indices_are_sorted=True)  # (nodes, m, Bp, C)
+    nodes4 = nodes4[:, :, :n_bins, :]
+    if subtract:
+        prev4 = prev_hist.reshape(m, P, n_bins, -1).transpose(1, 0, 2, 3)
+        pairs = nodes4.reshape((P, 2) + nodes4.shape[1:])
+        built4 = jnp.take_along_axis(
+            pairs, side.reshape(P, 1, 1, 1, 1), axis=1)[:, 0]
+        nodes4 = interleave_children(side, built4, prev4 - built4)
+    hist_native = nodes4.transpose(1, 0, 2, 3).reshape(m, n_nodes * n_bins, -1)
+
+    mask = (jnp.ones((m,), jnp.float32) if feature_mask is None
+            else feature_mask.astype(jnp.float32))
+    hist_p = _pad_to(hist_native, m_tile, axis=0)
+    mask_p = _pad_to(mask, m_tile, axis=0)[:, None]
+    params = jnp.stack([jnp.float32(lam), jnp.float32(min_data)])[None, :]
+    gain, idx = split_scan_pallas(hist_p, params, mask_p, n_nodes=n_nodes,
+                                  n_bins=n_bins, n_channels=c, m_tile=m_tile,
+                                  lane_pad=lane_pad, interpret=interpret)
+    return gain[:, 0], idx[:, 0], hist_native
 
 
 @functools.partial(jax.jit,
@@ -258,6 +386,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 # Re-export the oracles for convenience.
 histogram_ref = ref.histogram_ref
+histogram_tiles_ref = ref.histogram_tiles_ref
 split_scan_ref = ref.split_scan_ref
 forest_apply_ref = ref.forest_apply_ref
 tree_shap_ref = ref.tree_shap_ref

@@ -27,6 +27,34 @@ def histogram_ref(codes: jax.Array, node_pos: jax.Array, stats: jax.Array,
     return hist.reshape(m, n_nodes, n_bins, -1).transpose(1, 0, 2, 3)
 
 
+@functools.partial(jax.jit, static_argnames=("n_bins", "row_tile"))
+def histogram_tiles_ref(codes_t: jax.Array, stats: jax.Array, *, n_bins: int,
+                        row_tile: int = 256) -> jax.Array:
+    """Oracle for the partitioned tiles kernel (`hist_kernel.hist_tiles_pallas`).
+
+    Same contract: (m, S) partition-ordered codes + (S, C) stats ->
+    (m, S // row_tile, n_bins, C) per-tile histograms.  The body is the
+    identical one-hot ``dot_general`` per tile, so the kernel is
+    bit-identical to this oracle (exact 0/1-selection contraction, one fixed
+    op order).
+    """
+    m, s = codes_t.shape
+    c = stats.shape[1]
+    n_tiles = s // row_tile
+    codes_r = codes_t.reshape(m, n_tiles, row_tile).astype(jnp.int32)
+    stats_r = stats.reshape(n_tiles, row_tile, c)
+    onehot = (codes_r[..., None]
+              == jnp.arange(n_bins, dtype=jnp.int32)).astype(jnp.float32)
+
+    def per_tile(oh_t, st_t):                              # (m, TN, B), (TN, C)
+        return jax.vmap(lambda oh: jax.lax.dot_general(
+            oh, st_t, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))(oh_t)
+
+    out = jax.vmap(per_tile, in_axes=(1, 0))(onehot, stats_r)
+    return out.transpose(1, 0, 2, 3)                       # (m, T, B, C)
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
 def split_scan_ref(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
                    mask: jax.Array, *, n_nodes: int, n_bins: int):

@@ -1,0 +1,389 @@
+"""Node-partitioned histogram engine: partition invariants, sibling
+subtraction, kernel/oracle parity, and end-to-end engine equivalence.
+
+Tolerance contract (documented in docs/performance.md): the ``partition``
+engine re-orders row summation only, so histograms match ``direct`` to
+float32 accumulation noise (~1e-5 relative); the ``subtract`` engine derives
+each larger sibling as ``parent − built``, whose cancellation error is
+bounded by ``O(eps * ||parent||)`` per cell — 1e-3 absolute at test scales.
+Split *decisions* are identical on all fixed seeds below (near-ties closer
+than the drift bound could legally flip, which is why the legacy
+kernel-vs-jnp e2e in test_gbdt_core.py pins the direct engine).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import histogram as H
+from repro.core import tree as T
+from repro.core.boosting import GBDTConfig, SketchBoost
+from repro.data.pipeline import make_tabular
+from repro.kernels import ops, ref
+
+
+def _rand_problem(seed, n=400, m=6, B=16, d=3, depth=3, weights=None):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.uint8))
+    G = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    Hd = jnp.ones((n, d), jnp.float32)
+    w = (jnp.ones((n, 1), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32).reshape(n, 1))
+    stats = jnp.concatenate([G * w, w], axis=1)
+    return codes, stats, G, Hd
+
+
+def _routed_state(codes, stats, depth, n_bins):
+    """Grow a direct-engine tree and replay its routing to produce a
+    realistic LevelState + node_pos sequence per level."""
+    n = codes.shape[0]
+    tree, _ = T.grow_tree(codes, stats, stats[:, :-1], jnp.ones_like(
+        stats[:, :-1]), depth=depth, n_bins=n_bins, lam=1.0,
+        use_kernel="jnp", hist_engine="direct")
+    state = H.init_level_state(n)
+    node_pos = jnp.zeros((n,), jnp.int32)
+    out = [(state, node_pos)]
+    for lvl in range(depth - 1):
+        off = 2 ** lvl - 1
+        feat = jax.lax.dynamic_slice(tree.feat, (off,), (2 ** lvl,))
+        thr = jax.lax.dynamic_slice(tree.thr, (off,), (2 ** lvl,))
+        bits = T.route_bits(codes, node_pos, feat, thr)
+        node_pos = node_pos * 2 + bits
+        state = H.advance_level_state(state, bits)
+        out.append((state, node_pos))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LevelState / radix partition invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_partition_state_invariants(seed):
+    codes, stats, _, _ = _rand_problem(seed, n=300, depth=4)
+    for lvl, (state, node_pos) in enumerate(
+            _routed_state(codes, stats, 4, 16)):
+        order = np.asarray(state.order)
+        node_perm = np.asarray(state.node_perm)
+        counts = np.asarray(state.counts)
+        pos = np.asarray(node_pos)
+        # order is a permutation; node_perm is sorted; counts match bincount.
+        assert sorted(order.tolist()) == list(range(300))
+        assert (np.diff(node_perm) >= 0).all()
+        np.testing.assert_array_equal(
+            counts, np.bincount(pos, minlength=2 ** lvl))
+        # node_perm is node_pos gathered through the permutation.
+        np.testing.assert_array_equal(node_perm, pos[order])
+
+
+def test_partition_is_stable():
+    """Within a node, rows keep their original dataset order."""
+    codes, stats, _, _ = _rand_problem(3, n=200, depth=4)
+    for state, _ in _routed_state(codes, stats, 4, 16):
+        order = np.asarray(state.order)
+        node_perm = np.asarray(state.node_perm)
+        for c in np.unique(node_perm):
+            seg = order[node_perm == c]
+            assert (np.diff(seg) > 0).all()      # strictly increasing row ids
+
+
+def test_smaller_children_selection():
+    counts = jnp.asarray([3, 5, 7, 2, 4, 4], jnp.int32)
+    side, is_built = H.smaller_children(counts)
+    np.testing.assert_array_equal(np.asarray(side), [0, 1, 0])  # ties -> left
+    np.testing.assert_array_equal(np.asarray(is_built),
+                                  [True, False, False, True, True, False])
+
+
+# ---------------------------------------------------------------------------
+# jnp engine parity: partition / subtract vs direct histograms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,weights", [(0, None), (1, None), (2, "sgb")])
+def test_level_builders_match_direct(seed, weights):
+    n, B, depth = 500, 16, 4
+    rng = np.random.default_rng(seed + 100)
+    w = None if weights is None else (rng.random(n) < 0.7).astype(np.float32)
+    codes, stats, _, _ = _rand_problem(seed, n=n, B=B, depth=depth, weights=w)
+    prev = None
+    for lvl, (state, node_pos) in enumerate(
+            _routed_state(codes, stats, depth, B)):
+        n_nodes = 2 ** lvl
+        direct = H.build_histograms_jnp(codes, node_pos, stats,
+                                        n_nodes=n_nodes, n_bins=B)
+        part = H.build_level_jnp(codes, stats, state, None,
+                                 n_nodes=n_nodes, n_bins=B, subtract=False)
+        np.testing.assert_allclose(np.asarray(part), np.asarray(direct),
+                                   rtol=1e-5, atol=1e-4)
+        sub = H.build_level_jnp(codes, stats, state, prev,
+                                n_nodes=n_nodes, n_bins=B,
+                                subtract=lvl > 0)
+        np.testing.assert_allclose(np.asarray(sub), np.asarray(direct),
+                                   rtol=1e-4, atol=1e-3)
+        prev = sub
+
+
+def test_subtract_count_channel_smaller_side_exact():
+    """The directly-built (smaller) child's histogram is a pure re-ordered
+    sum — its count channel with unit weights is integer-exact."""
+    codes, stats, _, _ = _rand_problem(4, n=600, depth=4)
+    levels = _routed_state(codes, stats, 4, 16)
+    prev = None
+    for lvl, (state, node_pos) in enumerate(levels):
+        hist = H.build_level_jnp(codes, stats, state, prev,
+                                 n_nodes=2 ** lvl, n_bins=16,
+                                 subtract=lvl > 0)
+        prev = hist
+        counts = np.asarray(hist)[..., -1].sum(axis=2)     # (nodes, m)
+        if lvl > 0:
+            _, is_built = H.smaller_children(state.counts)
+            built = np.asarray(is_built)
+            exact = np.asarray(state.counts, np.float32)[built, None]
+            np.testing.assert_array_equal(counts[built], np.broadcast_to(
+                exact, counts[built].shape))
+
+
+# ---------------------------------------------------------------------------
+# Pallas tiles kernel vs oracle (bit parity) and fused level op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,tn,tiles,B,c", [
+    (3, 64, 2, 8, 2),
+    (5, 32, 4, 16, 4),
+    (2, 128, 3, 32, 8),
+])
+def test_hist_tiles_kernel_bit_matches_ref(m, tn, tiles, B, c):
+    ks = jax.random.split(jax.random.key(m * tn), 2)
+    codes_t = jax.random.randint(ks[0], (m, tn * tiles), 0, B, jnp.int32)
+    stats = jax.random.normal(ks[1], (tn * tiles, c), jnp.float32)
+    from repro.kernels.hist_kernel import hist_tiles_pallas
+    out_k = hist_tiles_pallas(codes_t, stats, n_bins=B, row_tile=tn,
+                              interpret=True)
+    out_r = ref.histogram_tiles_ref(codes_t, stats, n_bins=B, row_tile=tn)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("subtract", [False, True])
+def test_fused_level_op_matches_direct(subtract):
+    """ops.histogram_splits_level == direct histograms + split argmax."""
+    n, m, B, depth = 520, 7, 16, 3
+    codes, stats, _, _ = _rand_problem(7, n=n, m=m, B=B, depth=depth)
+    lam, min_data = jnp.float32(1.0), jnp.float32(1.0)
+    prev = None
+    for lvl, (state, node_pos) in enumerate(
+            _routed_state(codes, stats, depth, B)):
+        n_nodes = 2 ** lvl
+        gain_k, idx_k, hist_native = ops.histogram_splits_level(
+            codes, stats, state.order, state.counts, prev, lam, min_data,
+            n_nodes=n_nodes, n_bins=B, subtract=subtract and lvl > 0,
+            row_tile=64, interpret=True)
+        prev = hist_native
+        direct = H.build_histograms_jnp(codes, node_pos, stats,
+                                        n_nodes=n_nodes, n_bins=B)
+        c = stats.shape[1]
+        hist4 = hist_native.reshape(m, n_nodes, B, -1)[..., :c].transpose(
+            1, 0, 2, 3)
+        tol = dict(rtol=1e-4, atol=1e-3) if subtract else dict(rtol=1e-5,
+                                                               atol=1e-4)
+        np.testing.assert_allclose(np.asarray(hist4), np.asarray(direct),
+                                   **tol)
+        hist_mnb = direct.transpose(1, 0, 2, 3).reshape(m, n_nodes * B, c)
+        g_ref, i_ref = ref.split_scan_ref(hist_mnb, lam, min_data,
+                                          jnp.ones((m,), jnp.float32),
+                                          n_nodes=n_nodes, n_bins=B)
+        np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(i_ref))
+        np.testing.assert_allclose(np.asarray(gain_k), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_level_op_lane_padding_zero():
+    """Lane-padding channels of the carried native hist stay exactly zero
+    through subtraction (parent − built cannot leak into padding)."""
+    n, m, B = 256, 3, 8
+    codes, stats, _, _ = _rand_problem(9, n=n, m=m, B=B, depth=3)
+    c = stats.shape[1]
+    prev = None
+    for lvl, (state, _) in enumerate(_routed_state(codes, stats, 3, B)):
+        _, _, prev = ops.histogram_splits_level(
+            codes, stats, state.order, state.counts, prev,
+            jnp.float32(1.0), jnp.float32(1.0), n_nodes=2 ** lvl, n_bins=B,
+            subtract=lvl > 0, row_tile=64, interpret=True)
+        assert np.all(np.asarray(prev)[..., c:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# grow_tree engine equivalence (all kernel modes, weights, feature masks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("engine", ["partition", "subtract"])
+def test_grow_tree_engines_match_direct(mode, engine):
+    codes, stats, G, Hd = _rand_problem(11, n=450, m=8, B=16, depth=4)
+    kw = dict(depth=4, n_bins=16, lam=1.0, use_kernel=mode)
+    t0, p0 = T.grow_tree(codes, stats, G, Hd, hist_engine="direct", **kw)
+    t1, p1 = T.grow_tree(codes, stats, G, Hd, hist_engine=engine, **kw)
+    np.testing.assert_array_equal(np.asarray(t0.feat), np.asarray(t1.feat))
+    np.testing.assert_array_equal(np.asarray(t0.thr), np.asarray(t1.thr))
+    np.testing.assert_allclose(np.asarray(t0.value), np.asarray(t1.value),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+
+def test_grow_tree_engine_with_goss_weights_and_mask():
+    """Non-unit count-channel weights (GOSS-style) + colsample mask."""
+    rng = np.random.default_rng(5)
+    n = 400
+    w = np.where(rng.random(n) < 0.3, 2.5, np.where(rng.random(n) < 0.5,
+                                                    1.0, 0.0))
+    codes, stats, G, Hd = _rand_problem(5, n=n, m=8, B=16, depth=4,
+                                        weights=w.astype(np.float32))
+    fmask = jnp.asarray(rng.random(8) < 0.75)
+    kw = dict(depth=4, n_bins=16, lam=1.0, feature_mask=fmask,
+              use_kernel="jnp")
+    t0, _ = T.grow_tree(codes, stats, G, Hd, hist_engine="direct", **kw)
+    t1, _ = T.grow_tree(codes, stats, G, Hd, hist_engine="subtract", **kw)
+    np.testing.assert_array_equal(np.asarray(t0.feat), np.asarray(t1.feat))
+    np.testing.assert_array_equal(np.asarray(t0.thr), np.asarray(t1.thr))
+    np.testing.assert_allclose(np.asarray(t0.value), np.asarray(t1.value),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fits: engine equivalence across the 5 sketch methods + modes
+# ---------------------------------------------------------------------------
+
+def _plain_data(seed, n=500, m=8, d=5):
+    """Random data WITHOUT the tabular generator's redundant
+    linear-combination features: those produce split gains tied closer than
+    the documented subtraction drift, where either tie-break is legal.
+    Plain noise has no knife-edge ties, so exact structure equality is a
+    meaningful fixed-seed contract."""
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, m)).astype(np.float32),
+            rng.integers(0, d, n).astype(np.int32))
+
+
+@pytest.mark.parametrize("method", ["none", "top_outputs", "random_sampling",
+                                    "random_projection", "truncated_svd"])
+def test_fit_engines_identical_all_sketch_methods(method):
+    """Fixed-seed fits: identical split structure and near-identical loss
+    between the new default engine and the direct builder, for every sketch
+    method (jnp mode — what CPU CI executes end to end)."""
+    X, y = _plain_data(13)
+    kw = dict(loss="multiclass", n_trees=5, depth=4, learning_rate=0.3,
+              n_bins=32, sketch_method=method, sketch_k=2, use_kernel="jnp")
+    m_dir = SketchBoost(GBDTConfig(hist_engine="direct", **kw)).fit(X, y)
+    m_sub = SketchBoost(GBDTConfig(hist_engine="subtract", **kw)).fit(X, y)
+    np.testing.assert_array_equal(np.asarray(m_dir.forest.feat),
+                                  np.asarray(m_sub.forest.feat))
+    np.testing.assert_array_equal(np.asarray(m_dir.forest.thr),
+                                  np.asarray(m_sub.forest.thr))
+    np.testing.assert_allclose(np.asarray(m_dir.forest.value),
+                               np.asarray(m_sub.forest.value),
+                               rtol=1e-4, atol=1e-5)
+    assert m_sub.eval_loss(X, y) == pytest.approx(m_dir.eval_loss(X, y),
+                                                  rel=1e-4)
+
+
+def test_fit_sgb_goss_engine_parity():
+    X, y = _plain_data(14, d=4)
+    for kw_extra in (dict(subsample=0.7), dict(goss_a=0.2, goss_b=0.3)):
+        kw = dict(loss="multiclass", n_trees=4, depth=4, learning_rate=0.3,
+                  n_bins=32, use_kernel="jnp", **kw_extra)
+        m_dir = SketchBoost(GBDTConfig(hist_engine="direct", **kw)).fit(X, y)
+        m_sub = SketchBoost(GBDTConfig(hist_engine="subtract",
+                                       **kw)).fit(X, y)
+        np.testing.assert_array_equal(np.asarray(m_dir.forest.feat),
+                                      np.asarray(m_sub.forest.feat))
+        np.testing.assert_allclose(np.asarray(m_dir.forest.value),
+                                   np.asarray(m_sub.forest.value),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_one_vs_all_routed_through_new_engine():
+    """The vmapped one_vs_all grower runs the partitioned engine (the
+    per-output growers carry independent partitions under vmap)."""
+    X, y = make_tabular("multiclass", 450, 8, 4, seed=15)
+    kw = dict(loss="multiclass", strategy="one_vs_all", n_trees=4, depth=3,
+              learning_rate=0.3, n_bins=32, use_kernel="jnp")
+    m_dir = SketchBoost(GBDTConfig(hist_engine="direct", **kw)).fit(X, y)
+    m_sub = SketchBoost(GBDTConfig(hist_engine="subtract", **kw)).fit(X, y)
+    np.testing.assert_array_equal(np.asarray(m_dir.forest.feat),
+                                  np.asarray(m_sub.forest.feat))
+    np.testing.assert_array_equal(np.asarray(m_dir.forest.thr),
+                                  np.asarray(m_sub.forest.thr))
+    np.testing.assert_allclose(np.asarray(m_dir.predict(X)),
+                               np.asarray(m_sub.predict(X)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_interpret_e2e_new_engine(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 + use_kernel=True: the full fit runs the
+    partitioned tiles + split-scan Pallas kernels under the interpreter.
+    Compared against the jnp path on loss (split near-ties closer than the
+    documented subtraction drift may legally tie-break differently across
+    modes, so per-element prediction equality is not the contract here)."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert H.resolve_kernel_mode(True) == "interpret"
+    X, y = make_tabular("multiclass", 250, 6, 3, seed=16)
+    kw = dict(loss="multiclass", n_trees=3, depth=3, learning_rate=0.3,
+              n_bins=32, sketch_method="top_outputs", sketch_k=2)
+    m_ker = SketchBoost(GBDTConfig(use_kernel=True, **kw)).fit(X, y)
+    assert m_ker.cfg.use_kernel == "interpret"
+    assert m_ker.cfg.hist_engine == "subtract"
+    m_jnp = SketchBoost(GBDTConfig(use_kernel="jnp", **kw)).fit(X, y)
+    assert m_ker.eval_loss(X, y) == pytest.approx(m_jnp.eval_loss(X, y),
+                                                  rel=5e-2)
+    p = np.asarray(m_ker.predict(X))
+    assert np.all(np.isfinite(p))
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-4)
+
+
+def test_one_vs_all_interpret_kernel_smoke():
+    """vmap over the partitioned Pallas kernel pipeline (interpret mode)."""
+    X, y = make_tabular("multiclass", 200, 6, 3, seed=17)
+    cfg = GBDTConfig(loss="multiclass", strategy="one_vs_all", n_trees=2,
+                     depth=3, n_bins=16, learning_rate=0.3,
+                     use_kernel="interpret")
+    m = SketchBoost(cfg).fit(X, y)
+    assert np.isfinite(m.eval_loss(X, y))
+
+
+def test_scan_python_loop_parity_under_new_engine():
+    """Same engine => bit-identical forests between the two loop modes."""
+    X, y = make_tabular("multiclass", 400, 8, 4, seed=18)
+    kw = dict(loss="multiclass", n_trees=6, depth=4, learning_rate=0.3,
+              scan_chunk=4, use_kernel="jnp", hist_engine="subtract")
+    m_scan = SketchBoost(GBDTConfig(loop="scan", **kw)).fit(X, y)
+    m_py = SketchBoost(GBDTConfig(loop="python", **kw)).fit(X, y)
+    np.testing.assert_array_equal(np.asarray(m_scan.forest.feat),
+                                  np.asarray(m_py.forest.feat))
+    np.testing.assert_allclose(np.asarray(m_scan.forest.value),
+                               np.asarray(m_py.forest.value),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_hist_engine_resolution():
+    assert H.resolve_hist_engine("auto") == "subtract"
+    assert H.resolve_hist_engine(None) == "subtract"
+    for e in H.HIST_ENGINES:
+        assert H.resolve_hist_engine(e) == e
+    with pytest.raises(ValueError):
+        H.resolve_hist_engine("sorted")
+    cfg = GBDTConfig().resolve(4)
+    assert cfg.hist_engine == "subtract"
+
+
+def test_resolve_dispatch_shared_helper():
+    """The one resolver every dispatch site uses (histogram, fused splits,
+    forest traversal, TreeSHAP): mode string + interpret flag."""
+    assert ops.resolve_dispatch(False) == ("jnp", False)
+    assert ops.resolve_dispatch("interpret") == ("interpret", True)
+    assert ops.resolve_dispatch("pallas") == ("pallas", False)
+    # legacy override: interpret=True forces the interpreter for any kernel
+    # request; interpret=False forces the compiled kernel; both are ignored
+    # for explicit jnp requests.
+    assert ops.resolve_dispatch("pallas", True) == ("interpret", True)
+    assert ops.resolve_dispatch("interpret", False) == ("pallas", False)
+    assert ops.resolve_dispatch(False, True) == ("jnp", False)
+    assert ops.resolve_dispatch("jnp", True) == ("jnp", False)
