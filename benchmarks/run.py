@@ -250,33 +250,42 @@ def bench_hist(scale) -> List[Dict]:
 
 GBDT_QUICK = dict(n=4000, m=20, d=6, trees=40, depth=5, bins=64)
 GBDT_FULL = dict(n=40000, m=60, d=16, trees=200, depth=6, bins=256)
+GBDT_SMOKE = dict(n=800, m=10, d=4, trees=8, depth=4, bins=32)
 
 
 def bench_gbdt(scale) -> List[Dict]:
     """Compiled-loop trajectory: rounds/sec and end-to-end fit time over
-    {sketch_k in {2, 5, full}} x {single_tree, one_vs_all} x {scan, python}.
+    {sketch_k in {2, 5, full}} x {single_tree, one_vs_all} x {scan, python},
+    plus a growth-strategy axis (leaf-wise best-first vs level-wise at
+    EQUAL leaf budgets).
 
     This is the repo's standing perf baseline: every PR can diff
     `BENCH_gbdt.json` (written to the repo root) to see whether the hot path
     moved.  `rounds_per_sec` counts boosting rounds (one multivariate tree —
     or d univariate trees for one_vs_all — per round); `trajectory` samples
-    the cumulative train time every 10 rounds from the fit history.
+    the cumulative train time every 10 rounds from the fit history.  The
+    growth pairs carry an inline acceptance guard: best-first expansion of
+    the same number of leaves (under a deeper depth bound) must reach
+    strictly lower train loss than a full level-wise tree.
     """
     import jax
     from repro.core.boosting import GBDTConfig, SketchBoost
     from repro.core.histogram import resolve_kernel_mode
     from repro.data.pipeline import make_tabular, train_test_split
 
-    sc = GBDT_FULL if scale is FULL else GBDT_QUICK
+    sc = (GBDT_FULL if scale is FULL else
+          GBDT_SMOKE if scale is SMOKE else GBDT_QUICK)
     X, y = make_tabular("multiclass", sc["n"], sc["m"], sc["d"], seed=0)
     Xtr, Xte, ytr, yte = train_test_split(X, y, seed=0)
 
     rows: List[Dict] = []
 
-    def run_one(strategy, k_label, method, k, loop, depth, engine):
+    def run_one(strategy, k_label, method, k, loop, depth, engine,
+                growth="levelwise", max_leaves=0):
         cfg = GBDTConfig(loss="multiclass", strategy=strategy,
                          sketch_method=method, sketch_k=k,
                          n_trees=sc["trees"], depth=depth,
+                         growth=growth, max_leaves=max_leaves,
                          n_bins=sc["bins"], learning_rate=0.1,
                          loop=loop, hist_engine=engine, seed=0)
         t0 = time.perf_counter()
@@ -291,18 +300,21 @@ def bench_gbdt(scale) -> List[Dict]:
         rows.append({
             "strategy": strategy, "sketch_k": k_label,
             "method": method, "loop": loop, "depth": depth,
+            "growth": growth, "max_leaves": max_leaves,
             "hist_engine": model.cfg.hist_engine,
             "rounds": int(model.forest.n_trees),
             "cold_fit_time_s": round(cold, 3),
             "fit_time_s": round(dt, 3),
             "rounds_per_sec": round(model.forest.n_trees / dt, 3),
+            "train_loss": round(model.eval_loss(Xtr, ytr), 5),
             "test_loss": round(model.eval_loss(Xte, yte), 5),
             "trajectory_s": traj,
         })
         print(f"  gbdt {strategy} k={k_label} {loop} depth={depth} "
-              f"{rows[-1]['hist_engine']}: "
+              f"{growth} {rows[-1]['hist_engine']}: "
               f"{rows[-1]['rounds_per_sec']} rounds/s "
               f"({rows[-1]['fit_time_s']}s)", flush=True)
+        return rows[-1]
 
     for strategy in ("single_tree", "one_vs_all"):
         for k_label, method, k in ((2, "random_projection", 2),
@@ -314,11 +326,33 @@ def bench_gbdt(scale) -> List[Dict]:
     # Engine comparison rows at depth 6 — where the direct builder's
     # O(n*m*c*2^l) per-level blow-up is largest; diff these pairs to see
     # the node-partitioned + sibling-subtraction win end to end.
-    for strategy, k_label, method, k in (
-            ("single_tree", 5, "random_projection", 5),
-            ("one_vs_all", "full", "none", 0)):
-        for engine in ("auto", "direct"):
-            run_one(strategy, k_label, method, k, "scan", 6, engine)
+    if scale is not SMOKE:
+        for strategy, k_label, method, k in (
+                ("single_tree", 5, "random_projection", 5),
+                ("one_vs_all", "full", "none", 0)):
+            for engine in ("auto", "direct"):
+                run_one(strategy, k_label, method, k, "scan", 6, engine)
+    # Growth-strategy axis: the same leaf budget (2^(depth-1) leaves per
+    # tree) spent level-wise (full depth-1 tree) vs best-first under the
+    # full depth bound, across sketch widths.
+    budget = 2 ** (sc["depth"] - 1)
+    for k_label, method, k in ((2, "random_projection", 2),
+                               (5, "random_projection", 5),
+                               ("full", "none", 0)):
+        lvl = run_one("single_tree", k_label, method, k, "scan",
+                      sc["depth"] - 1, "auto")
+        lw = run_one("single_tree", k_label, method, k, "scan",
+                     sc["depth"], "auto", growth="leafwise",
+                     max_leaves=budget)
+        # Acceptance guard: equal leaf budget, strictly better train fit
+        # at bench scales.  Greedy best-first is not *mathematically*
+        # guaranteed to win, so the tiny CI smoke shapes only require
+        # no-worse (a knife-edge tie there must not fail unrelated PRs).
+        if scale is SMOKE:
+            assert lw["train_loss"] <= lvl["train_loss"] + 1e-6, (k_label,
+                                                                  lw, lvl)
+        else:
+            assert lw["train_loss"] < lvl["train_loss"], (k_label, lw, lvl)
 
     payload = {
         "bench": "gbdt_compiled_loop",
@@ -505,7 +539,7 @@ def bench_shap(scale) -> List[Dict]:
                 phi = ref.tree_shap_ref(
                     phi, codes, pack.slot_feat[i:i + 1],
                     pack.slot_lo[i:i + 1], pack.slot_hi[i:i + 1],
-                    pack.slot_z[i:i + 1], pf.leaf[i:i + 1],
+                    pack.slot_z[i:i + 1], pack.leaf[i:i + 1],
                     pf.out_col[i:i + 1], pf.lr, depth=pf.depth)
             return phi, EX.expected_values(pf, pack)
 

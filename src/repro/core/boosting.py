@@ -53,6 +53,10 @@ class GBDTConfig:
     sketch_k: int = 5                    # paper's recommended default
     n_trees: int = 100
     depth: int = 6
+    growth: str = "levelwise"            # "levelwise" (depth-wise heaps) |
+                                         # "leafwise" (best-first, needs
+                                         # max_leaves; depth is the bound)
+    max_leaves: int = 0                  # leaf budget, leafwise only
     learning_rate: float = 0.05
     lambda_l2: float = 1.0
     n_bins: int = 256
@@ -69,15 +73,63 @@ class GBDTConfig:
     hist_engine: str = "auto"            # "auto"=subtract: partitioned rows +
                                          # sibling subtraction; or explicit
                                          # "direct"/"partition"/"subtract"
+    hist_dtype: str = "float32"          # tiles-kernel MXU input dtype;
+                                         # "bfloat16" halves stats bytes
+                                         # (fp32 accumulation; kernel modes
+                                         # only)
     loop: str = "scan"                   # "scan" (compiled rounds) | "python"
     scan_chunk: int = 32                 # rounds per scan segment (host boundary)
     predict_row_chunk: int = 65536       # rows per predict dispatch (0 = all)
     seed: int = 0
 
+    def validate(self) -> None:
+        """Reject option combinations that would otherwise be silently
+        ignored (the failure mode this guards: a user sets ``max_leaves``
+        and the level-wise grower quietly never reads it)."""
+        if self.growth not in ("levelwise", "leafwise"):
+            raise ValueError(f"unknown growth {self.growth!r}; "
+                             "expected 'levelwise' or 'leafwise'")
+        if self.growth == "levelwise" and self.max_leaves:
+            raise ValueError(
+                f"max_leaves={self.max_leaves} is set but growth="
+                "'levelwise' grows full 2^depth-leaf levels and would "
+                "silently ignore it; set growth='leafwise' (best-first, "
+                "honours the leaf budget) or drop max_leaves")
+        if self.growth == "leafwise":
+            if self.max_leaves < 2:
+                raise ValueError(
+                    "growth='leafwise' needs max_leaves >= 2 (the leaf "
+                    f"budget of each best-first tree); got "
+                    f"{self.max_leaves}")
+            if self.max_leaves > 2 ** self.depth:
+                raise ValueError(
+                    f"max_leaves={self.max_leaves} exceeds 2^depth="
+                    f"{2 ** self.depth}: the depth bound makes the extra "
+                    "budget unreachable (it would be silently ignored); "
+                    "raise depth or lower max_leaves")
+            if self.hist_engine not in ("auto", "subtract"):
+                raise ValueError(
+                    f"hist_engine={self.hist_engine!r} has no leaf-wise "
+                    "implementation (the best-first grower is inherently "
+                    "node-partitioned with sibling subtraction); use "
+                    "'auto'/'subtract' or growth='levelwise'")
+        if self.hist_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown hist_dtype {self.hist_dtype!r}; "
+                             "expected 'float32' or 'bfloat16'")
+        if (self.hist_dtype == "bfloat16"
+                and H.resolve_kernel_mode(self.use_kernel) == "jnp"):
+            raise ValueError(
+                "hist_dtype='bfloat16' rounds inside the Pallas tiles "
+                "kernel; the jnp path would silently ignore it — request a "
+                "kernel mode (use_kernel=True on TPU, 'interpret' for "
+                "debugging) or keep hist_dtype='float32'")
+
     def resolve(self, d: int) -> "GBDTConfig":
-        """Bind the output dimension and pin the kernel mode for this process
-        (backend auto-detection must happen outside jit traces so the resolved
-        mode is part of every static cache key)."""
+        """Validate option combinations, bind the output dimension, and pin
+        the kernel mode for this process (backend auto-detection must happen
+        outside jit traces so the resolved mode is part of every static
+        cache key)."""
+        self.validate()
         return dataclasses.replace(
             self, n_outputs=d,
             use_kernel=H.resolve_kernel_mode(self.use_kernel),
@@ -123,18 +175,26 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     w = _sample_weights(s_key, G, cfg)
     fmask = _feature_mask(c_key, codes.shape[1], cfg)
 
+    def grow(stats, G_t, H_t):
+        """Growth-strategy dispatch: ``(tree, leaf_pos)`` for one tree."""
+        kw = dict(depth=cfg.depth, n_bins=cfg.n_bins, lam=cfg.lambda_l2,
+                  min_data_in_leaf=cfg.min_data_in_leaf,
+                  min_gain=cfg.min_gain, feature_mask=fmask,
+                  use_kernel=cfg.use_kernel)
+        if cfg.growth == "leafwise":
+            return T.grow_tree_leafwise(codes, stats, G_t, H_t,
+                                        max_leaves=cfg.max_leaves,
+                                        hist_dtype=cfg.hist_dtype, **kw)
+        return T.grow_tree(codes, stats, G_t, H_t,
+                           hist_engine=cfg.hist_engine,
+                           hist_dtype=cfg.hist_dtype, **kw)
+
     if cfg.strategy == "single_tree":
         Gk = SK.build_sketch(G * w, method=cfg.sketch_method, k=cfg.sketch_k,
                              key=k_key)
         stats = jnp.concatenate([Gk, w], axis=1)
-        tree, _ = T.grow_tree(codes, stats, G, Hd, depth=cfg.depth,
-                              n_bins=cfg.n_bins, lam=cfg.lambda_l2,
-                              min_data_in_leaf=cfg.min_data_in_leaf,
-                              min_gain=cfg.min_gain, feature_mask=fmask,
-                              use_kernel=cfg.use_kernel,
-                              hist_engine=cfg.hist_engine)
-        F = F + cfg.learning_rate * tree.value[
-            T.tree_leaf_index(tree.feat, tree.thr, codes, depth=cfg.depth)]
+        tree, leaf_pos = grow(stats, G, Hd)
+        F = F + cfg.learning_rate * tree.value[leaf_pos]
         return F, tree
 
     # one_vs_all: vmap a single-output grower over the d outputs.  Each output j
@@ -142,27 +202,26 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     # round carries a (d, ...) leading axis folded into the Tree arrays.
     def grow_one(g_j, h_j):
         stats = jnp.concatenate([(g_j * w[:, 0])[:, None], w], axis=1)
-        tr, _ = T.grow_tree(codes, stats, g_j[:, None], h_j[:, None],
-                            depth=cfg.depth, n_bins=cfg.n_bins,
-                            lam=cfg.lambda_l2,
-                            min_data_in_leaf=cfg.min_data_in_leaf,
-                            min_gain=cfg.min_gain, feature_mask=fmask,
-                            use_kernel=cfg.use_kernel,
-                            hist_engine=cfg.hist_engine)
-        return tr
+        return grow(stats, g_j[:, None], h_j[:, None])
 
-    trees = jax.vmap(grow_one, in_axes=(1, 1))(G, Hd)      # Tree with (d, ...) axes
-
-    def apply_one(f, t, v):
-        pos = T.tree_leaf_index(f, t, codes, depth=cfg.depth)
-        return v[pos, 0]                                   # (n,)
-
-    delta = jax.vmap(apply_one)(trees.feat, trees.thr, trees.value)  # (d, n)
+    trees, poss = jax.vmap(grow_one, in_axes=(1, 1))(G, Hd)  # (d, ...) axes
+    delta = jax.vmap(lambda v, pos: v[pos, 0])(trees.value, poss)  # (d, n)
     F = F + cfg.learning_rate * delta.T
-    # Fold the per-output axis into a Tree whose value tensor is (d, 2^D, 1);
+    # Fold the per-output axis into a tree whose value tensor is (d, L, 1);
     # `forest.pack_forest` later flattens the (T, d, ...) buffers into width-1
     # packed trees with per-tree output columns.
     return F, trees
+
+
+def _as_forest(stacked):
+    """Scan-stacked per-round tree pytree -> training forest container.
+
+    Heap `tree.Tree` buffers get the `tree.Forest` wrapper; `tree.NodeTree`
+    is its own stacked container (the arrays just carry a leading T axis).
+    """
+    if isinstance(stacked, T.NodeTree):
+        return stacked
+    return T.Forest(**stacked._asdict())
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
@@ -172,7 +231,7 @@ def boost_step(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     return _boost_round(F, codes, Y, key, cfg)
 
 
-def _apply_tree(tree: T.Tree, codes: jax.Array, F: jax.Array,
+def _apply_tree(tree, codes: jax.Array, F: jax.Array,
                 cfg: GBDTConfig) -> jax.Array:
     """Add one round's contribution to the raw scores F for new data.
 
@@ -180,14 +239,24 @@ def _apply_tree(tree: T.Tree, codes: jax.Array, F: jax.Array,
     packed-forest serving path uses — so on-device validation eval inside
     the scan loop runs the Pallas traversal kernel whenever the split-search
     kernels do (``use_kernel`` auto-resolution), and bit-matches serving.
+    Heap trees from the level-wise grower are canonicalized to the pointer
+    node-list in-trace (a cheap concat); leaf-wise `tree.NodeTree` rounds
+    already carry pointers.
     """
-    if cfg.strategy == "single_tree":
-        feat, thr, leaf = tree.feat[None], tree.thr[None], tree.value[None]
+    single = cfg.strategy == "single_tree"
+    if isinstance(tree, T.NodeTree):
+        feat, thr = tree.feat, tree.thr
+        left, right, leaf = tree.left, tree.right, tree.value
+    else:
+        feat, thr, left, right, leaf = T.heap_to_node_arrays(
+            tree.feat, tree.thr, tree.value)
+    if single:
+        feat, thr, left, right, leaf = (feat[None], thr[None], left[None],
+                                        right[None], leaf[None])
         out_col = jnp.zeros((1,), jnp.int32)
     else:                                    # one round = d univariate trees
-        feat, thr, leaf = tree.feat, tree.thr, tree.value
         out_col = jnp.arange(feat.shape[0], dtype=jnp.int32)
-    return FO.forest_apply(F, codes, feat, thr, leaf, out_col,
+    return FO.forest_apply(F, codes, feat, thr, left, right, leaf, out_col,
                            cfg.learning_rate, depth=cfg.depth,
                            mode=cfg.use_kernel)
 
@@ -311,9 +380,10 @@ class SketchBoost:
             raise ValueError(f"unknown loop {cfg.loop!r}; "
                              "expected 'scan' or 'python'")
         self.cfg = cfg
-        self.packed = FO.pack_forest(self.forest, self.base_score,
-                                     cfg.learning_rate,
-                                     strategy=cfg.strategy)
+        self.packed = FO.pack_forest(
+            self.forest, self.base_score, cfg.learning_rate,
+            strategy=cfg.strategy,
+            max_depth=cfg.depth if cfg.growth == "leafwise" else None)
         self._path_pack = None              # path slots belong to old forest
         return self
 
@@ -325,7 +395,7 @@ class SketchBoost:
         chunk = cfg.scan_chunk if cfg.scan_chunk > 0 else n_total
         chunk = max(1, min(chunk, n_total))
         best_loss, best_round = np.inf, -1
-        feat_c, thr_c, val_c, gain_c, cov_c = [], [], [], [], []
+        chunks = []                 # per-segment stacked tree pytrees
         done, stop = 0, False
         t0 = time.perf_counter()
         seg_start = 0.0
@@ -357,11 +427,7 @@ class SketchBoost:
                                   f"(best {best_loss:.5f} @ {best_round})")
                         break
                 self.history.append(rec)
-            feat_c.append(trees.feat[:keep])
-            thr_c.append(trees.thr[:keep])
-            val_c.append(trees.value[:keep])
-            gain_c.append(trees.gain[:keep])
-            cov_c.append(trees.cover[:keep])
+            chunks.append(jax.tree.map(lambda x: x[:keep], trees))
             done += keep
             seg_start = elapsed
             if verbose and not stop:
@@ -370,18 +436,14 @@ class SketchBoost:
                     msg += f" valid_loss={float(vl[keep - 1]):.5f}"
                 print(msg)
 
-        feat = jnp.concatenate(feat_c, axis=0)
-        thr = jnp.concatenate(thr_c, axis=0)
-        value = jnp.concatenate(val_c, axis=0)
-        gain = jnp.concatenate(gain_c, axis=0)
-        cover = jnp.concatenate(cov_c, axis=0)
+        stacked = (chunks[0] if len(chunks) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *chunks))
         if best_round >= 0 and cfg.early_stopping_rounds:
             keep_n = best_round + 1
-            feat, thr, value = feat[:keep_n], thr[:keep_n], value[:keep_n]
-            gain, cover = gain[:keep_n], cover[:keep_n]
-        self.best_round = best_round if best_round >= 0 else feat.shape[0] - 1
-        self.forest = T.Forest(feat=feat, thr=thr, value=value, gain=gain,
-                               cover=cover)
+            stacked = jax.tree.map(lambda x: x[:keep_n], stacked)
+        self.best_round = (best_round if best_round >= 0
+                           else stacked.feat.shape[0] - 1)
+        self.forest = _as_forest(stacked)
 
     def _fit_python(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
                     has_eval: bool, key, verbose: bool) -> None:
@@ -418,7 +480,8 @@ class SketchBoost:
         if best_round >= 0 and cfg.early_stopping_rounds:
             trees = trees[:best_round + 1]
         self.best_round = best_round if best_round >= 0 else len(trees) - 1
-        self.forest = T.stack_trees(trees)
+        self.forest = _as_forest(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                              *trees))
 
     # -- inference ----------------------------------------------------------
     @property
@@ -486,7 +549,11 @@ class SketchBoost:
         return phi, base
 
     def apply(self, X, iteration: Optional[int] = None) -> jax.Array:
-        """Leaf-index embeddings: ``(n, T)`` int32 per-tree leaf positions."""
+        """Terminal-node embeddings: ``(n, T)`` int32 per-tree node ids in
+        the packed forest's unified numbering (one-hot them over
+        ``model.packed.n_nodes`` buckets).  For level-wise (heap) trees the
+        id of leaf ordinal ``j`` is ``2^depth - 1 + j`` — changed from the
+        pre-pointer-format leaf ordinals."""
         from repro import explain as EX
         codes = self._bin(np.asarray(X, np.float32))
         return EX.apply_forest(self._sliced_packed(iteration), codes)

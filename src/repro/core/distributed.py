@@ -119,6 +119,21 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
     sharded, Y is labels (n,) or dense (n, d) sharded like F.  The returned Tree
     has replicated structure arrays and model-sharded leaf values.
     """
+    cfg.validate()
+    # This grower builds its own level-wise fp32 loop; reject options it
+    # would otherwise silently ignore (the same guarantee cfg.validate()
+    # gives the single-device path).  Leaf-wise growth needs psummed
+    # per-node counts + replicated parent caches — see ROADMAP.
+    if cfg.growth != "levelwise":
+        raise NotImplementedError(
+            f"growth={cfg.growth!r} is not implemented by the distributed "
+            "grower (level-wise only); see ROADMAP 'Distributed leaf-wise "
+            "growth'")
+    if cfg.hist_dtype != "float32":
+        raise NotImplementedError(
+            f"hist_dtype={cfg.hist_dtype!r} is a Pallas tiles-kernel "
+            "option; the distributed grower's shard-local builds are plain "
+            "fp32 segment-sums and would silently ignore it")
     tp = mesh.shape[model_axis]
     row_spec = P(row_axes)
     f_spec = P(row_axes, model_axis)

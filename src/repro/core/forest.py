@@ -1,13 +1,16 @@
-"""PackedForest: structure-of-arrays ensemble format + compiled inference.
+"""PackedForest: sparse-topology SoA ensemble format + compiled inference.
 
-Training (`core/boosting.py`) produces scan-stacked per-tree buffers; this
-module packs them into a single serving-ready structure-of-arrays — the same
-idea as the packed node lists GPU GBDT systems traverse (XGBoost-GPU,
-Mitchell et al. 2018) — and provides every inference entry point on top of
-it:
+Training (`core/boosting.py`) produces scan-stacked per-tree buffers — heap
+trees from the level-wise grower, node-list trees from the leaf-wise
+(best-first) grower — and this module canonicalizes BOTH into a single
+serving-ready structure-of-arrays with *explicit topology*: a unified node
+id space per tree with ``left``/``right`` child pointers and a per-tree
+``node_count``, the same packed node lists GPU GBDT systems traverse
+(XGBoost-GPU, Mitchell et al. 2018).  Every inference entry point runs on
+top of it:
 
   * `forest_apply`       — one fused "add these trees to these scores" op,
-                           dispatched to the Pallas traversal kernel
+                           dispatched to the Pallas pointer-chasing kernel
                            (`kernels/predict_kernel.py`) or its gather-based
                            jnp reference under the same ``use_kernel`` modes
                            as the training kernels;
@@ -19,20 +22,22 @@ it:
 
 Layout
 ------
-All arrays carry a leading ``T`` (tree) axis; a tree of depth ``D`` is a
-perfect binary heap:
+All arrays carry a leading ``T`` (tree) axis over a node axis of static size
+``N`` (``2^(D+1) - 1`` for canonicalized depth-``D`` heaps, ``2 *
+max_leaves - 1`` for leaf-wise trees):
 
-  feat, thr   (T, 2^D - 1) int32    split feature / threshold per internal
-                                    node (go left when ``code <= thr``)
-  left, right (T, 2^D - 1) int32    explicit child pointers in global node
-                                    numbering (internal 0..2^D-2, leaves
-                                    2^D-1..2^(D+1)-2).  Stored for format
-                                    generality (node-list interchange à la
-                                    XGBoost dumps); the depth-synchronous
-                                    traversal exploits the perfect-heap
-                                    invariant ``left = 2i+1, right = 2i+2``
-                                    that `pack_forest` guarantees.
-  leaf        (T, 2^D, w) float32   multioutput leaf blocks.  ``w`` is the
+  feat, thr   (T, N) int32          split feature / threshold per node (go
+                                    left when ``code <= thr``; unused on
+                                    terminal nodes)
+  left, right (T, N) int32          explicit child pointers in the unified
+                                    numbering.  Terminal nodes self-loop
+                                    (``left[i] == right[i] == i``), so a
+                                    fixed ``depth``-bound walk is exact for
+                                    any topology; node slots at and beyond
+                                    ``node_count`` are inert self-loop
+                                    leaves no real pointer reaches.
+  leaf        (T, N, w) float32     node-indexed multioutput leaf blocks
+                                    (zero on internal nodes).  ``w`` is the
                                     *leaf width*: the full output dim ``d``
                                     for ``single_tree`` (leaf values always
                                     use the full gradients, eq. (3) — only
@@ -42,56 +47,64 @@ perfect binary heap:
                                     leaf block (0 when ``w == d``).
   base        (d,) float32          constant base score.
   lr          () float32            learning rate.
-  cover       (T, 2^(D+1) - 1) f32  weighted training row counts per node in
-                                    global numbering (internal 0..2^D-2,
-                                    leaves 2^D-1..2^(D+1)-2), packed at fit
-                                    time so path-dependent TreeSHAP and
-                                    cover/split importances (`repro.explain`)
-                                    never re-scan training data.  ``None``
-                                    for forests packed from cover-less
-                                    buffers (pre-v2 checkpoints).
-  gain        (T, 2^D - 1) float32  split gains (0 on pass-through nodes);
-                                    ``None`` when unavailable.
+  cover       (T, N) float32        weighted training row counts per node,
+                                    packed at fit time so path-dependent
+                                    TreeSHAP and cover/split importances
+                                    (`repro.explain`) never re-scan training
+                                    data.  ``None`` for forests packed from
+                                    cover-less buffers (pre-v2 checkpoints).
+  gain        (T, N) float32        split gains (0 on terminal/pass-through
+                                    nodes); ``None`` when unavailable.
+  node_count  (T,) int32            nodes actually used per tree.
+  depth       int (static)          walk bound: the maximum root-to-leaf
+                                    depth over all trees.  A plain Python
+                                    int — it parameterizes compiled loop
+                                    lengths, so it rides the manifest (not
+                                    the array store) through checkpoints.
 
-The whole structure is a flat pytree of arrays, so it checkpoints through
-`io.checkpoint.CheckpointManager` unchanged and crosses jit boundaries as
-plain donatable buffers.
+Heap canonicalization preserves the old *global* node numbering (internal
+``0 .. 2^D - 2``, leaf ``j`` at ``2^D - 1 + j``) and walks/leaf gathers
+perform the identical float arithmetic, so predictions and SHAP values are
+bit-identical to the former implicit-heap engine — asserted by the parity
+tests.  All array fields form a flat pytree, so the structure checkpoints
+through `io.checkpoint` (format v3; v1/v2 heap checkpoints load through the
+heap->pointer converter) and crosses jit boundaries as plain buffers.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import histogram as H
 from repro.core import tree as T
 
 
 class PackedForest(NamedTuple):
-    feat: jax.Array      # (T, 2^D - 1) int32
-    thr: jax.Array       # (T, 2^D - 1) int32
-    left: jax.Array      # (T, 2^D - 1) int32 global child ids
-    right: jax.Array     # (T, 2^D - 1) int32
-    leaf: jax.Array      # (T, 2^D, w) float32
+    feat: jax.Array      # (T, N) int32
+    thr: jax.Array       # (T, N) int32
+    left: jax.Array      # (T, N) int32 child pointers (self-loop on leaves)
+    right: jax.Array     # (T, N) int32
+    leaf: jax.Array      # (T, N, w) float32 node-indexed leaf blocks
     out_col: jax.Array   # (T,) int32
     base: jax.Array      # (d,) float32
     lr: jax.Array        # () float32
-    cover: Optional[jax.Array] = None  # (T, 2^(D+1) - 1) float32 node covers
-    gain: Optional[jax.Array] = None   # (T, 2^D - 1) float32 split gains
+    cover: Optional[jax.Array] = None  # (T, N) float32 node covers
+    gain: Optional[jax.Array] = None   # (T, N) float32 split gains
+    node_count: Optional[jax.Array] = None  # (T,) int32 used nodes
+    depth: int = 0       # static walk bound (max root-to-leaf depth)
 
     @property
     def n_trees(self) -> int:
         return self.feat.shape[0]
 
     @property
-    def depth(self) -> int:
-        return (self.feat.shape[1] + 1).bit_length() - 1
-
-    @property
-    def n_leaves(self) -> int:
-        return self.leaf.shape[1]
+    def n_nodes(self) -> int:
+        """Static node-axis size N (>= node_count everywhere)."""
+        return self.feat.shape[1]
 
     @property
     def leaf_width(self) -> int:
@@ -110,15 +123,31 @@ class PackedForest(NamedTuple):
     def n_rounds(self) -> int:
         return self.n_trees // self.trees_per_round
 
-
-def _heap_children(n_trees: int, n_nodes: int) -> Tuple[jax.Array, jax.Array]:
-    left = 2 * jnp.arange(n_nodes, dtype=jnp.int32) + 1
-    return (jnp.broadcast_to(left, (n_trees, n_nodes)),
-            jnp.broadcast_to(left + 1, (n_trees, n_nodes)))
+    @property
+    def is_heap(self) -> bool:
+        """Whether EVERY tree is a canonicalized perfect heap (host-side
+        check on concrete pointer arrays — all trees, both pointer tensors:
+        a creation-order leaf-wise tree can coincide with the heap pattern
+        on one tensor of one tree, so a sampled check would mis-decode)."""
+        n = self.n_nodes
+        d = (n + 1).bit_length() - 2
+        if n != 2 ** (d + 1) - 1:
+            return False
+        h = 2 ** d - 1
+        expect_l = np.concatenate([2 * np.arange(h) + 1, np.arange(h, n)])
+        if not np.array_equal(np.asarray(self.left),
+                              np.broadcast_to(expect_l, self.left.shape)):
+            return False
+        expect_r = np.concatenate([2 * np.arange(h) + 2, np.arange(h, n)])
+        if not np.array_equal(np.asarray(self.right),
+                              np.broadcast_to(expect_r, self.right.shape)):
+            return False
+        return (self.node_count is None
+                or bool(np.all(np.asarray(self.node_count) == n)))
 
 
 def _heap_cover(leaf_cover: jax.Array) -> jax.Array:
-    """(T, 2^D) leaf covers -> (T, 2^(D+1) - 1) full-heap node covers.
+    """(T, 2^D) leaf covers -> (T, 2^(D+1) - 1) full node covers.
 
     Internal covers are the sums of their leaf descendants (levels built
     bottom-up by pairwise folding), concatenated in global node order:
@@ -131,26 +160,37 @@ def _heap_cover(leaf_cover: jax.Array) -> jax.Array:
     return jnp.concatenate(levels, axis=1)
 
 
-def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
-                *, strategy: str = "single_tree") -> PackedForest:
-    """Pack the scan-stacked training buffers into a `PackedForest`.
+def _pointer_max_depth(left, right) -> int:
+    """Max root-to-leaf depth from concrete pointer arrays (host-side).
 
-    ``single_tree`` buffers arrive as ``(T, nodes)`` / ``(T, leaves, d)``;
-    ``one_vs_all`` buffers carry an extra per-output axis ``(T, d, ...)``
-    which is folded into the tree axis in round-major order (round 0 output
-    0, round 0 output 1, ...), so `slice_rounds` and the per-column
-    accumulation order both match the training loop exactly.
+    Both producers (heap canonicalization, the creation-order leaf-wise
+    grower) emit children with larger ids than their parent, so one forward
+    sweep over node ids computes every node's depth.
     """
-    base = jnp.asarray(base_score, jnp.float32).reshape(-1)
+    left = np.asarray(left)
+    right = np.asarray(right)
+    n_trees, n = left.shape
+    d = np.zeros((n_trees, n), np.int32)
+    rows = np.arange(n_trees)
+    for i in range(n):
+        internal = left[:, i] != i
+        r = rows[internal]
+        d[r, left[internal, i]] = d[r, i] + 1
+        d[r, right[internal, i]] = d[r, i] + 1
+    return int(d.max()) if n else 0
+
+
+def _pack_heap(forest: T.Forest, strategy: str):
+    """Heap training buffers -> node-list arrays (strategy folded in)."""
     gain, leaf_cover = forest.gain, forest.cover
     if strategy == "single_tree":
-        feat, thr, leaf = forest.feat, forest.thr, forest.value
+        feat, thr, value = forest.feat, forest.thr, forest.value
         out_col = jnp.zeros((feat.shape[0],), jnp.int32)
     elif strategy == "one_vs_all":
         n_rounds, d = forest.feat.shape[0], forest.feat.shape[1]
         feat = forest.feat.reshape(n_rounds * d, -1)
         thr = forest.thr.reshape(n_rounds * d, -1)
-        leaf = forest.value.reshape(n_rounds * d, forest.value.shape[2], -1)
+        value = forest.value.reshape(n_rounds * d, forest.value.shape[2], -1)
         out_col = jnp.tile(jnp.arange(d, dtype=jnp.int32), n_rounds)
         if gain is not None:
             gain = gain.reshape(n_rounds * d, -1)
@@ -158,48 +198,166 @@ def pack_forest(forest: T.Forest, base_score: jax.Array, learning_rate,
             leaf_cover = leaf_cover.reshape(n_rounds * d, -1)
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
-    left, right = _heap_children(feat.shape[0], feat.shape[1])
+    h = feat.shape[1]
+    n_leaves = h + 1
+    feat_n, thr_n, left, right, leaf = T.heap_to_node_arrays(
+        feat.astype(jnp.int32), thr.astype(jnp.int32),
+        value.astype(jnp.float32))
     cover = None if leaf_cover is None else _heap_cover(leaf_cover)
-    return PackedForest(feat=feat.astype(jnp.int32),
-                        thr=thr.astype(jnp.int32), left=left, right=right,
-                        leaf=leaf.astype(jnp.float32), out_col=out_col,
-                        base=base, lr=jnp.float32(learning_rate),
-                        cover=cover,
-                        gain=None if gain is None
-                        else gain.astype(jnp.float32))
+    gain_n = (None if gain is None else jnp.concatenate(
+        [gain.astype(jnp.float32),
+         jnp.zeros((gain.shape[0], n_leaves), jnp.float32)], axis=1))
+    node_count = jnp.full((feat.shape[0],), h + n_leaves, jnp.int32)
+    depth = n_leaves.bit_length() - 1
+    return (feat_n, thr_n, left, right, leaf, out_col, cover, gain_n,
+            node_count, depth)
 
 
-def unpack_forest(pf: PackedForest) -> Tuple[T.Forest, str]:
-    """Inverse of `pack_forest`: ``(Forest, strategy)`` round trip.
+def _pack_nodes(forest: T.NodeTree, strategy: str):
+    """Stacked `NodeTree` buffers -> node-list arrays (strategy folded in)."""
+    feat, thr, left, right = forest.feat, forest.thr, forest.left, forest.right
+    value, gain, cover = forest.value, forest.gain, forest.cover
+    node_count = forest.node_count
+    if strategy == "single_tree":
+        out_col = jnp.zeros((feat.shape[0],), jnp.int32)
+    elif strategy == "one_vs_all":
+        n_rounds, d, n = feat.shape
 
-    Leaf covers come back out of the packed heap bit-exactly (the leaf block
-    of ``pf.cover`` is a verbatim copy of the training buffers; only internal
-    covers are derived)."""
-    leaf_cover = None if pf.cover is None else pf.cover[:, pf.n_leaves - 1:]
-    if pf.leaf_width == pf.n_outputs:
-        return T.Forest(feat=pf.feat, thr=pf.thr, value=pf.leaf,
-                        gain=pf.gain, cover=leaf_cover), "single_tree"
+        def fold(x):
+            return None if x is None else x.reshape((n_rounds * d,)
+                                                    + x.shape[2:])
+
+        feat, thr, left, right = map(fold, (feat, thr, left, right))
+        value, gain, cover = map(fold, (value, gain, cover))
+        node_count = fold(node_count)
+        out_col = jnp.tile(jnp.arange(d, dtype=jnp.int32), n_rounds)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return (feat.astype(jnp.int32), thr.astype(jnp.int32),
+            left.astype(jnp.int32), right.astype(jnp.int32),
+            value.astype(jnp.float32), out_col,
+            None if cover is None else cover.astype(jnp.float32),
+            None if gain is None else gain.astype(jnp.float32),
+            node_count.astype(jnp.int32), None)
+
+
+def pack_forest(forest: Union[T.Forest, T.NodeTree], base_score: jax.Array,
+                learning_rate, *, strategy: str = "single_tree",
+                max_depth: Optional[int] = None) -> PackedForest:
+    """Canonicalize scan-stacked training buffers into a `PackedForest`.
+
+    Accepts BOTH tree topologies: heap `tree.Forest` buffers (level-wise
+    grower) are mapped onto the global node numbering with explicit heap
+    pointers; stacked `tree.NodeTree` buffers (leaf-wise grower) pack
+    verbatim.  ``single_tree`` buffers arrive as ``(T, ...)``;
+    ``one_vs_all`` buffers carry an extra per-output axis ``(T, d, ...)``
+    which is folded into the tree axis in round-major order (round 0 output
+    0, round 0 output 1, ...), so `slice_rounds` and the per-column
+    accumulation order both match the training loop exactly.  ``max_depth``
+    overrides the walk bound (the leaf-wise trainer passes its configured
+    depth limit); by default it is derived from the heap shape or, for
+    node-list buffers, from a host-side pointer sweep.
+    """
+    base = jnp.asarray(base_score, jnp.float32).reshape(-1)
+    if isinstance(forest, T.NodeTree):
+        (feat, thr, left, right, leaf, out_col, cover, gain, node_count,
+         depth) = _pack_nodes(forest, strategy)
+    else:
+        (feat, thr, left, right, leaf, out_col, cover, gain, node_count,
+         depth) = _pack_heap(forest, strategy)
+    if max_depth is not None:
+        depth = max_depth
+    elif depth is None:
+        depth = _pointer_max_depth(left, right)
+    return PackedForest(feat=feat, thr=thr, left=left, right=right,
+                        leaf=leaf, out_col=out_col, base=base,
+                        lr=jnp.float32(learning_rate), cover=cover,
+                        gain=gain, node_count=node_count, depth=int(depth))
+
+
+def heap_packed_to_pointer(feat, thr, leaf, out_col, base, lr, cover=None,
+                           gain=None) -> PackedForest:
+    """Implicit-heap packed arrays (formats v1/v2) -> pointer `PackedForest`.
+
+    ``feat``/``thr`` are ``(T, 2^D - 1)`` internal-node arrays, ``leaf`` is
+    the ``(T, 2^D, w)`` leaf-indexed block tensor, and ``cover`` (when
+    present) is already in global node order — the numbering this format
+    preserves.  Used by `io.checkpoint.load_forest_checkpoint` to upgrade
+    old checkpoints in memory; predictions are bit-identical.
+    """
+    feat = jnp.asarray(feat, jnp.int32)
+    thr = jnp.asarray(thr, jnp.int32)
+    leaf = jnp.asarray(leaf, jnp.float32)
+    h = feat.shape[1]
+    n_leaves = h + 1
+    feat_n, thr_n, left, right, leaf_n = T.heap_to_node_arrays(feat, thr,
+                                                               leaf)
+    gain_n = (None if gain is None else jnp.concatenate(
+        [jnp.asarray(gain, jnp.float32),
+         jnp.zeros((feat.shape[0], n_leaves), jnp.float32)], axis=1))
+    return PackedForest(
+        feat=feat_n, thr=thr_n, left=left, right=right, leaf=leaf_n,
+        out_col=jnp.asarray(out_col, jnp.int32),
+        base=jnp.asarray(base, jnp.float32).reshape(-1),
+        lr=jnp.asarray(lr, jnp.float32).reshape(()),
+        cover=None if cover is None else jnp.asarray(cover, jnp.float32),
+        gain=gain_n,
+        node_count=jnp.full((feat.shape[0],), h + n_leaves, jnp.int32),
+        depth=n_leaves.bit_length() - 1)
+
+
+def unpack_forest(pf: PackedForest):
+    """Inverse of `pack_forest`: ``(forest, strategy)`` round trip.
+
+    Heap-canonical forests unpack back into the training-side `tree.Forest`
+    (heap buffers, leaf covers bit-exact — the leaf block of ``pf.cover`` is
+    a verbatim copy of the training buffers; only internal covers are
+    derived).  Sparse-topology forests unpack into a stacked
+    `tree.NodeTree`."""
+    one_vs_all = pf.leaf_width != pf.n_outputs
     d = pf.n_outputs
-    n_rounds = pf.n_trees // d
-    return T.Forest(feat=pf.feat.reshape(n_rounds, d, -1),
-                    thr=pf.thr.reshape(n_rounds, d, -1),
-                    value=pf.leaf.reshape(n_rounds, d, pf.n_leaves, 1),
-                    gain=None if pf.gain is None
-                    else pf.gain.reshape(n_rounds, d, -1),
-                    cover=None if leaf_cover is None
-                    else leaf_cover.reshape(n_rounds, d, -1)
-                    ), "one_vs_all"
+    if pf.is_heap:
+        h = (pf.n_nodes - 1) // 2
+        feat, thr = pf.feat[:, :h], pf.thr[:, :h]
+        value = pf.leaf[:, h:]
+        gain = None if pf.gain is None else pf.gain[:, :h]
+        leaf_cover = None if pf.cover is None else pf.cover[:, h:]
+        if not one_vs_all:
+            return T.Forest(feat=feat, thr=thr, value=value, gain=gain,
+                            cover=leaf_cover), "single_tree"
+        n_rounds = pf.n_trees // d
+        return T.Forest(
+            feat=feat.reshape(n_rounds, d, -1),
+            thr=thr.reshape(n_rounds, d, -1),
+            value=value.reshape(n_rounds, d, value.shape[1], 1),
+            gain=None if gain is None else gain.reshape(n_rounds, d, -1),
+            cover=None if leaf_cover is None
+            else leaf_cover.reshape(n_rounds, d, -1)), "one_vs_all"
+    fields = dict(feat=pf.feat, thr=pf.thr, left=pf.left, right=pf.right,
+                  value=pf.leaf, gain=pf.gain, cover=pf.cover,
+                  node_count=pf.node_count)
+    if one_vs_all:
+        n_rounds = pf.n_trees // d
+
+        def unfold(x):
+            return None if x is None else x.reshape((n_rounds, d)
+                                                    + x.shape[1:])
+
+        fields = {k: unfold(v) for k, v in fields.items()}
+        return T.NodeTree(**fields), "one_vs_all"
+    return T.NodeTree(**fields), "single_tree"
 
 
 def slice_rounds(pf: PackedForest, n_rounds: int) -> PackedForest:
     """First ``n_rounds`` boosting rounds (e.g. ``best_iteration``) — a pure
     slice of the tree axis, no recomputation."""
     t = n_rounds * pf.trees_per_round
-    return pf._replace(feat=pf.feat[:t], thr=pf.thr[:t], left=pf.left[:t],
-                       right=pf.right[:t], leaf=pf.leaf[:t],
-                       out_col=pf.out_col[:t],
-                       cover=None if pf.cover is None else pf.cover[:t],
-                       gain=None if pf.gain is None else pf.gain[:t])
+    return pf._replace(
+        feat=pf.feat[:t], thr=pf.thr[:t], left=pf.left[:t],
+        right=pf.right[:t], leaf=pf.leaf[:t], out_col=pf.out_col[:t],
+        cover=None if pf.cover is None else pf.cover[:t],
+        gain=None if pf.gain is None else pf.gain[:t],
+        node_count=None if pf.node_count is None else pf.node_count[:t])
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +365,8 @@ def slice_rounds(pf: PackedForest, n_rounds: int) -> PackedForest:
 # ---------------------------------------------------------------------------
 
 def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
-                 thr: jax.Array, leaf: jax.Array, out_col: jax.Array, lr,
+                 thr: jax.Array, left: jax.Array, right: jax.Array,
+                 leaf: jax.Array, out_col: jax.Array, lr,
                  *, depth: int, mode="jnp") -> jax.Array:
     """``F_init + lr * sum_t tree_t(codes)`` under a resolved kernel mode.
 
@@ -220,11 +379,12 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
     from repro.kernels import ops as kops
     mode, interp = kops.resolve_dispatch(mode)
     if mode != "jnp":
-        return kops.forest_apply(F_init, codes, feat, thr, leaf, out_col, lr,
-                                 depth=depth, interpret=interp)
+        return kops.forest_apply(F_init, codes, feat, thr, left, right,
+                                 leaf, out_col, lr, depth=depth,
+                                 interpret=interp)
     from repro.kernels import ref
-    return ref.forest_apply_ref(F_init, codes, feat, thr, leaf, out_col,
-                                jnp.float32(lr), depth=depth)
+    return ref.forest_apply_ref(F_init, codes, feat, thr, left, right, leaf,
+                                out_col, jnp.float32(lr), depth=depth)
 
 
 def predict_raw(pf: PackedForest, codes: jax.Array, *, mode="jnp",
@@ -247,31 +407,33 @@ def predict_raw(pf: PackedForest, codes: jax.Array, *, mode="jnp",
         if part.shape[0] < chunk:                 # pad tail, keep one trace
             part = jnp.pad(part, ((0, chunk - part.shape[0]), (0, 0)))
         F0 = jnp.broadcast_to(pf.base, (chunk, d)).astype(jnp.float32)
-        outs.append(forest_apply(F0, part, pf.feat, pf.thr, pf.leaf,
-                                 pf.out_col, pf.lr, depth=pf.depth,
-                                 mode=mode))
+        outs.append(forest_apply(F0, part, pf.feat, pf.thr, pf.left,
+                                 pf.right, pf.leaf, pf.out_col, pf.lr,
+                                 depth=pf.depth, mode=mode))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     return out[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "trees_per_round",
                                              "mode"))
-def _staged_scan(codes, feat, thr, leaf, out_col, base, lr, *, depth: int,
-                 trees_per_round: int, mode: str):
+def _staged_scan(codes, feat, thr, left, right, leaf, out_col, base, lr,
+                 *, depth: int, trees_per_round: int, mode: str):
     n, d = codes.shape[0], base.shape[0]
     n_rounds = feat.shape[0] // trees_per_round
 
     def per_round(F, xs):
-        f, th, v, col = xs
-        F = forest_apply(F, codes, f, th, v, col, lr, depth=depth, mode=mode)
+        f, th, lf, rg, v, col = xs
+        F = forest_apply(F, codes, f, th, lf, rg, v, col, lr, depth=depth,
+                         mode=mode)
         return F, F
 
     def group(x):
         return x.reshape((n_rounds, trees_per_round) + x.shape[1:])
 
     F0 = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
-    _, staged = jax.lax.scan(per_round, F0, (group(feat), group(thr),
-                                             group(leaf), group(out_col)))
+    _, staged = jax.lax.scan(per_round, F0,
+                             (group(feat), group(thr), group(left),
+                              group(right), group(leaf), group(out_col)))
     return staged
 
 
@@ -285,16 +447,16 @@ def predict_staged(pf: PackedForest, codes: jax.Array, *, mode="jnp"
     trajectory — meant for validation-sized inputs (model selection,
     learning curves), not the serving path.
     """
-    return _staged_scan(codes, pf.feat, pf.thr, pf.leaf, pf.out_col,
-                        pf.base, pf.lr, depth=pf.depth,
+    return _staged_scan(codes, pf.feat, pf.thr, pf.left, pf.right, pf.leaf,
+                        pf.out_col, pf.base, pf.lr, depth=pf.depth,
                         trees_per_round=pf.trees_per_round,
                         mode=H.resolve_kernel_mode(mode))
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "trees_per_round",
                                              "mode", "loss_name"))
-def _staged_eval_scan(codes, Y, feat, thr, leaf, out_col, base, lr, *,
-                      depth: int, trees_per_round: int, mode: str,
+def _staged_eval_scan(codes, Y, feat, thr, left, right, leaf, out_col, base,
+                      lr, *, depth: int, trees_per_round: int, mode: str,
                       loss_name: str):
     from repro.core import losses as L
     loss = L.get_loss(loss_name)
@@ -302,16 +464,18 @@ def _staged_eval_scan(codes, Y, feat, thr, leaf, out_col, base, lr, *,
     n_rounds = feat.shape[0] // trees_per_round
 
     def per_round(F, xs):
-        f, th, v, col = xs
-        F = forest_apply(F, codes, f, th, v, col, lr, depth=depth, mode=mode)
+        f, th, lf, rg, v, col = xs
+        F = forest_apply(F, codes, f, th, lf, rg, v, col, lr, depth=depth,
+                         mode=mode)
         return F, loss.value(F, Y).astype(jnp.float32)
 
     def group(x):
         return x.reshape((n_rounds, trees_per_round) + x.shape[1:])
 
     F0 = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
-    _, vloss = jax.lax.scan(per_round, F0, (group(feat), group(thr),
-                                            group(leaf), group(out_col)))
+    _, vloss = jax.lax.scan(per_round, F0,
+                            (group(feat), group(thr), group(left),
+                             group(right), group(leaf), group(out_col)))
     return vloss
 
 
@@ -319,8 +483,9 @@ def staged_eval(pf: PackedForest, codes: jax.Array, Y: jax.Array,
                 loss_name: str, *, mode="jnp") -> jax.Array:
     """Per-round validation losses ``(n_rounds,)`` without materialising the
     staged score tensor — argmin gives ``best_iteration`` in one dispatch."""
-    return _staged_eval_scan(codes, Y, pf.feat, pf.thr, pf.leaf, pf.out_col,
-                             pf.base, pf.lr, depth=pf.depth,
+    return _staged_eval_scan(codes, Y, pf.feat, pf.thr, pf.left, pf.right,
+                             pf.leaf, pf.out_col, pf.base, pf.lr,
+                             depth=pf.depth,
                              trees_per_round=pf.trees_per_round,
                              mode=H.resolve_kernel_mode(mode),
                              loss_name=loss_name)

@@ -271,6 +271,106 @@ def build_level_jnp(codes: jax.Array, stats: jax.Array, state: LevelState,
     return interleave_children(side, built4, sib4)
 
 
+# ---------------------------------------------------------------------------
+# Per-node partition for the leaf-wise (best-first) grower: the same stable
+# radix idea as `advance_level_state`, but splitting ONE node's contiguous
+# segment at a time over a sparse node id space.
+# ---------------------------------------------------------------------------
+
+class NodePartition(NamedTuple):
+    """Row partition over sparse node ids (leaf-wise grower loop state).
+
+    ``order`` is a permutation of ``[0, n)`` whose positions
+    ``[starts[j], starts[j] + counts[j])`` hold the rows of node ``j`` in
+    original dataset order (stability — summation order and therefore fp32
+    histogram bits are reproducible, and match the level engine's compacted
+    builds for the same row sets).  Unlike `LevelState`, segments are NOT
+    sorted by node id: `split_partition_at` splits one segment in place, so
+    children inherit their parent's position in ``order``.
+    """
+    order: jax.Array      # (n,) int32 row permutation
+    node_perm: jax.Array  # (n,) int32 node id at each position
+    starts: jax.Array     # (n_slots,) int32 segment starts
+    counts: jax.Array     # (n_slots,) int32 rows per node
+
+
+def init_node_partition(n: int, n_slots: int) -> NodePartition:
+    """Every row in root node 0; unused slots empty."""
+    return NodePartition(
+        order=jnp.arange(n, dtype=jnp.int32),
+        node_perm=jnp.zeros((n,), jnp.int32),
+        starts=jnp.zeros((n_slots,), jnp.int32),
+        counts=jnp.zeros((n_slots,), jnp.int32).at[0].set(n))
+
+
+@jax.jit
+def split_partition_at(part: NodePartition, p: jax.Array, c1: jax.Array,
+                       c2: jax.Array, go_right: jax.Array,
+                       do: jax.Array) -> NodePartition:
+    """Stably split node ``p``'s segment into children ``c1`` (left rows
+    first) and ``c2`` — an O(n) fixed-shape scatter touching only the
+    segment.  ``go_right`` is the per-row routing bit in ORIGINAL row order;
+    ``do=False`` makes the whole update an exact no-op (the masked guard the
+    fixed-bound expansion loop relies on after frontier exhaustion).
+    """
+    n = part.order.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    bit = go_right.astype(jnp.int32)[part.order]
+    in_seg = (part.node_perm == p) & do
+    sel_left = in_seg & (bit == 0)
+    pre_left = jnp.cumsum(sel_left.astype(jnp.int32)) - sel_left
+    s0 = part.starts[p]
+    lefts_before = pre_left - pre_left[s0]
+    offset_in_seg = pos - s0
+    rank = jnp.where(bit == 0, lefts_before, offset_in_seg - lefts_before)
+    n_left = jnp.sum(sel_left.astype(jnp.int32))
+    dest = jnp.where(in_seg,
+                     s0 + jnp.where(bit == 0, rank, n_left + rank), pos)
+    order = jnp.zeros((n,), jnp.int32).at[dest].set(part.order)
+    child = jnp.where(bit == 0, c1, c2)
+    node_perm = jnp.zeros((n,), jnp.int32).at[dest].set(
+        jnp.where(in_seg, child, part.node_perm))
+    n_p = part.counts[p]
+    upd = lambda a, i, v: a.at[i].set(jnp.where(do, v, a[i]))
+    counts = upd(upd(upd(part.counts, c1, n_left), c2, n_p - n_left), p, 0)
+    starts = upd(upd(part.starts, c1, s0), c2, s0 + n_left)
+    return NodePartition(order=order, node_perm=node_perm, starts=starts,
+                         counts=counts)
+
+
+def gather_node_rows(part: NodePartition, node: jax.Array, n_buf: int):
+    """Fixed-size gather of one node's contiguous rows.
+
+    Returns ``(rows, valid)``: ``rows`` indexes the original dataset
+    (clamped on padding slots), ``valid`` masks real rows.  ``n_buf`` must
+    statically bound the node's row count (``n // 2`` for any
+    smaller-of-two-children, ``n`` for the root).
+    """
+    n = part.order.shape[0]
+    idx = part.starts[node] + jnp.arange(n_buf, dtype=jnp.int32)
+    valid = jnp.arange(n_buf, dtype=jnp.int32) < part.counts[node]
+    rows = part.order[jnp.clip(idx, 0, n - 1)]
+    return rows, valid
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def node_hist_jnp(codes_g: jax.Array, stats_g: jax.Array, *, n_bins: int
+                  ) -> jax.Array:
+    """Single-node histogram from gathered rows: ``(m, n_bins, c)``.
+
+    ``codes_g`` is ``(S, m)`` and ``stats_g`` ``(S, c)`` with padding rows
+    already zeroed — the jnp twin of the kernel path's
+    `kernels.ops.node_histogram`.  Summation runs in gathered (partition)
+    order, matching the level engine's compacted smaller-child builds
+    bit-for-bit for identical row sets.
+    """
+
+    def per_feature(col):
+        return jax.ops.segment_sum(stats_g, col, num_segments=n_bins)
+
+    return jax.vmap(per_feature, in_axes=1)(codes_g.astype(jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("n_leaves",))
 def leaf_sums(leaf_pos: jax.Array, G: jax.Array, H: jax.Array,
               *, n_leaves: int):

@@ -2,11 +2,14 @@
 
 No training data is touched: gains and per-node covers were packed into the
 `PackedForest` at fit time, so a serving process can answer "which features
-drive this model" from the checkpoint alone.  Pass-through heap nodes (the
-padding the depth-wise grower emits when no positive-gain split exists) are
-excluded via the cover tensor: a *real* split routes weighted rows to both
-children, so ``cover[right_child] > 0``; pass-through routing sends
-everything left.
+drive this model" from the checkpoint alone.  Internal nodes are recognised
+from the explicit pointers (``left != self``); pass-through nodes (the
+padding the depth-wise grower emits when no positive-gain split exists,
+preserved verbatim by heap canonicalization) are excluded via the cover
+tensor: a *real* split routes weighted rows to both children, so
+``cover[right_child] > 0``; pass-through routing sends everything left.
+Leaf-wise trees materialise only real splits, so the same rule is a no-op
+filter there.
 """
 from __future__ import annotations
 
@@ -16,21 +19,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import tree as T
+from repro.kernels import ref
 
 IMPORTANCE_KINDS = ("gain", "cover", "split_count")
 
 
 def real_split_mask(pf) -> jax.Array:
-    """(T, 2^D - 1) bool — internal nodes carrying an actual split."""
+    """(T, N) bool — nodes carrying an actual split."""
     if pf.cover is None:
         raise ValueError(
             "feature importances need the per-node cover tensor; this "
             "PackedForest was packed without one (format_version 1 "
             "checkpoint?) — retrain/re-checkpoint to enable importances.")
-    n_internal = pf.feat.shape[1]
-    right = 2 * jnp.arange(n_internal, dtype=jnp.int32) + 2
-    return (pf.cover[:, :n_internal] > 0) & (pf.cover[:, right] > 0)
+    ids = jnp.arange(pf.n_nodes, dtype=jnp.int32)
+    internal = pf.left != ids[None, :]
+    right_cover = jnp.take_along_axis(pf.cover, pf.right, axis=1)
+    return internal & (right_cover > 0)
 
 
 def feature_importances(pf, *, kind: str = "gain",
@@ -53,7 +57,7 @@ def feature_importances(pf, *, kind: str = "gain",
                              "'split_count'")
         w = pf.gain * mask
     elif kind == "cover":
-        w = pf.cover[:, :pf.feat.shape[1]] * mask
+        w = pf.cover * mask
     else:
         w = mask
     if n_features is None:
@@ -68,13 +72,17 @@ def feature_importances(pf, *, kind: str = "gain",
 
 
 @functools.partial(jax.jit, static_argnames=("depth",))
-def _apply_walk(feat, thr, codes, *, depth):
-    walk = jax.vmap(lambda f, t: T.tree_leaf_index(f, t, codes, depth=depth))
-    return walk(feat, thr).T.astype(jnp.int32)             # (n, T)
+def _apply_walk(feat, thr, left, right, codes, *, depth):
+    walk = jax.vmap(functools.partial(ref.node_walk_ref, codes=codes,
+                                      depth=depth))
+    return walk(feat, thr, left, right).T.astype(jnp.int32)   # (n, T)
 
 
 def apply_forest(pf, codes: jax.Array) -> jax.Array:
-    """Leaf-index embeddings: ``(n, T)`` int32, the leaf (0..2^D-1) each row
+    """Terminal-node embeddings: ``(n, T)`` int32, the node id each row
     lands in per tree — the GBDT-as-feature-encoder trick (leaf one-hots
-    feed linear models / nearest-neighbour indexes)."""
-    return _apply_walk(pf.feat, pf.thr, codes, depth=pf.depth)
+    feed linear models / nearest-neighbour indexes).  For heap-canonicalized
+    trees the ids are the global numbering (leaf ``j`` of a depth-``D`` tree
+    is ``2^D - 1 + j``)."""
+    return _apply_walk(pf.feat, pf.thr, pf.left, pf.right, codes,
+                       depth=pf.depth)

@@ -1,12 +1,21 @@
 """Root-to-leaf path extraction from a `PackedForest` (host-side, numpy).
 
-TreeSHAP consumes trees path-by-path: each (tree, leaf) pair is a path whose
-edges carry a split condition and a cover ratio.  This module flattens the
-perfect-heap forest into fixed-shape per-(tree, leaf, slot) tensors once per
-model — they depend only on the forest, never on the rows being explained —
-so both the jnp oracle (`kernels.ref.tree_shap_ref`) and the Pallas
-path-walk kernel (`kernels.shap_kernel`) see identical, rectangular inputs:
+TreeSHAP consumes trees path-by-path: each (tree, terminal node) pair is a
+path whose edges carry a split condition and a cover ratio.  This module
+flattens the sparse-topology pointer forest into fixed-shape per-(tree,
+path, slot) tensors once per model — they depend only on the forest, never
+on the rows being explained — so both the jnp oracle
+(`kernels.ref.tree_shap_ref`) and the Pallas path-walk kernel
+(`kernels.shap_kernel`) see identical, rectangular inputs:
 
+  * the path axis enumerates each tree's *terminal* nodes (gathered through
+    a per-tree slot table, so sparse leaf-wise trees pay for their actual
+    leaves, not the full node space).  Ancestor chains are recovered by
+    inverting the ``left``/``right`` pointers — children carry larger ids
+    than their parent in both producers, so the inverse is a single
+    ``parent``/``came-from-right`` table — and stored root-to-leaf, which
+    for heap-canonicalized trees reproduces the legacy heap extraction
+    bit-for-bit (slot order fixes the EXTEND/UNWIND evaluation order);
   * duplicate features along a path are merged into one *slot* (GPUTreeShap
     does the same host-side preprocessing): their box conditions intersect
     to a single bin interval ``lo < code <= hi`` and their cover ratios
@@ -14,12 +23,15 @@ path-walk kernel (`kernels.shap_kernel`) see identical, rectangular inputs:
   * every path is padded to exactly ``depth`` slots with inert null players
     (``feat = -1``, ``o = 1``, ``z = 1``) — exactly invariant for the
     Shapley subset sums (see `kernels.ref.path_unwind_psis`), which is what
-    makes a fixed slot axis possible;
-  * empty subtrees (pass-through routing) get ``z = 0`` edges and zero leaf
-    values, contributing exactly nothing.
+    makes a fixed slot axis possible for trees of arbitrary topology;
+  * ragged terminal counts pad with zero-leaf inert paths, and empty
+    subtrees (pass-through routing in heap-canonicalized trees) get
+    ``z = 0`` edges and zero leaf values — both contribute exactly nothing.
 
-Covers come from `PackedForest.cover`, packed at fit time — explanation
-never re-scans training data.
+The pack carries the gathered ``leaf`` value blocks (terminal-slot order),
+so SHAP consumers never index the forest's node axis directly.  Covers come
+from `PackedForest.cover`, packed at fit time — explanation never re-scans
+training data.
 """
 from __future__ import annotations
 
@@ -36,18 +48,73 @@ from repro.kernels.ref import SHAP_BIG_BIN as BIG_BIN
 
 
 class PathPack(NamedTuple):
-    """Per-(tree, leaf, slot) path metadata, all ``(T, L, D)`` unless noted.
+    """Per-(tree, terminal, slot) path metadata, all ``(T, L, D)`` unless
+    noted.
 
-    ``o = (code[slot_feat] > slot_lo) & (code[slot_feat] <= slot_hi)`` is the
-    one-fraction; ``slot_z`` the path-dependent zero-fraction;
+    ``L`` is the maximum terminal count over trees (``2^D`` for
+    heap-canonical forests); ragged trees pad with inert zero-leaf paths.
+    ``o = (code[slot_feat] > slot_lo) & (code[slot_feat] <= slot_hi)`` is
+    the one-fraction; ``slot_z`` the path-dependent zero-fraction;
     ``leaf_weight`` (T, L) is ``prod_s z_s`` — the unconditional probability
-    mass reaching each leaf, used for expected values.
+    mass reaching each terminal, used for expected values; ``leaf`` (T, L,
+    w) the terminal-slot-gathered leaf value blocks.
     """
     slot_feat: jax.Array   # int32, -1 on padding slots
     slot_lo: jax.Array     # int32 (exclusive lower bin bound)
     slot_hi: jax.Array     # int32 (inclusive upper bin bound)
     slot_z: jax.Array      # float32
     leaf_weight: jax.Array # (T, L) float32
+    leaf: jax.Array        # (T, L, w) float32 terminal leaf blocks
+
+
+def _parent_tables(left: np.ndarray, right: np.ndarray):
+    """Invert child pointers: ``(parent, came_from_right)`` per (tree, node).
+
+    Roots (and inert padded slots) get parent ``-1``.  Terminal self-loops
+    are redirected to a dummy column so they never register as parents.
+    """
+    n_trees, n = left.shape
+    ids = np.arange(n)
+    internal = left != ids[None, :]
+    rows = np.broadcast_to(ids[None, :], (n_trees, n))
+    parent = np.full((n_trees, n + 1), -1, np.int64)
+    came_right = np.zeros((n_trees, n + 1), np.int64)
+    l_tgt = np.where(internal, left, n)            # no-ops -> dummy column
+    r_tgt = np.where(internal, right, n)
+    np.put_along_axis(parent, l_tgt, rows, axis=1)
+    np.put_along_axis(parent, r_tgt, rows, axis=1)
+    np.put_along_axis(came_right, r_tgt, np.ones_like(rows), axis=1)
+    return parent[:, :n], came_right[:, :n].astype(bool)
+
+
+def _terminal_slots(left: np.ndarray, node_count):
+    """Per-tree REAL terminal node ids, padded to the forest-wide max count.
+
+    Inert padding slots (ids at/after ``node_count``) also self-loop but
+    are excluded — they carry zero leaves, so including them would only
+    inflate the path axis (up to 2x for early-exhausted leaf-wise trees).
+    Returns ``(slots (T, L) int64, valid (T, L) bool)``; padding entries
+    point at node 0 but are masked inert by the caller.  ``L`` is rounded
+    up to a multiple of 8 so the path axis is already sublane-aligned: the
+    Pallas wrapper then never re-pads it, keeping the kernel's contraction
+    shapes identical to the jnp oracle's — the regime in which the two are
+    bit-identical (the heap-era extractor got this for free from
+    ``L = 2^depth``).
+    """
+    n_trees, n = left.shape
+    ids = np.arange(n)
+    terminal = left == ids[None, :]
+    if node_count is not None:
+        terminal &= ids[None, :] < np.asarray(node_count)[:, None]
+    counts = terminal.sum(axis=1)
+    L = int(counts.max()) if n_trees else 0
+    L = max(L + (-L) % 8, 8)
+    slots = np.zeros((n_trees, L), np.int64)
+    valid = np.arange(L)[None, :] < counts[:, None]
+    for t in range(n_trees):
+        tids = np.flatnonzero(terminal[t])
+        slots[t, :tids.size] = tids
+    return slots, valid
 
 
 def build_path_pack(pf, *, need_cover: bool = True) -> PathPack:
@@ -64,48 +131,74 @@ def build_path_pack(pf, *, need_cover: bool = True) -> PathPack:
             "Path-dependent SHAP and cover importances need a forest trained "
             "and checkpointed by this version; interventional SHAP "
             "(algorithm='interventional', background=...) still works.")
-    depth, n_leaves = pf.depth, pf.n_leaves
-    feat = np.asarray(pf.feat)                    # (T, 2^D - 1)
+    depth, n = pf.depth, pf.n_nodes
+    n_trees = pf.n_trees
+    feat = np.asarray(pf.feat)                     # (T, N)
     thr = np.asarray(pf.thr).astype(np.int64)
-    cover = (np.ones((pf.n_trees, 2 * n_leaves - 1)) if pf.cover is None
+    left = np.asarray(pf.left).astype(np.int64)
+    right = np.asarray(pf.right).astype(np.int64)
+    leaf = np.asarray(pf.leaf)
+    cover = (np.ones((n_trees, n)) if pf.cover is None
              else np.asarray(pf.cover, dtype=np.float64))
+    parent, came_right = _parent_tables(left, right)
+    slots, valid_slot = _terminal_slots(left, pf.node_count)
+    n_paths = slots.shape[1]
 
-    lvl = np.arange(depth)                        # (D,)
-    ell = np.arange(n_leaves)[:, None]            # (L, 1)
-    pos = ell >> (depth - lvl)                    # (L, D) in-level position
-    heap = pos + (2 ** lvl - 1)                   # internal node id per edge
-    bit = (ell >> (depth - lvl - 1)) & 1          # 0 = left, 1 = right
-    child_pos = 2 * pos + bit
-    child = np.where(lvl + 1 < depth,
-                     child_pos + (2 ** (lvl + 1) - 1),
-                     (n_leaves - 1) + ell)        # global child node id
-
-    feat_e = feat[:, heap]                        # (T, L, D)
-    thr_e = thr[:, heap]
-    c_par = cover[:, heap]
-    c_ch = cover[:, child]
-    z_e = np.where(c_par > 0, c_ch / np.where(c_par > 0, c_par, 1.0), 0.0)
-    lo_e = np.where(bit == 0, -1, thr_e)          # left: code <= thr
-    hi_e = np.where(bit == 0, thr_e, BIG_BIN)     # right: code > thr
+    # Walk every terminal's ancestor chain leaf-to-root; edges beyond a
+    # path's real depth are inert.  The slot axis is flipped to root-to-leaf
+    # afterwards (before merging) so full-depth heap paths reproduce the
+    # legacy extraction order exactly.
+    cur = slots.copy()
+    feat_e = np.full((n_trees, n_paths, depth), -1, np.int64)
+    lo_e = np.full((n_trees, n_paths, depth), -1, np.int64)
+    hi_e = np.full((n_trees, n_paths, depth), BIG_BIN, np.int64)
+    z_e = np.ones((n_trees, n_paths, depth))
+    for s in range(depth):
+        p = np.take_along_axis(parent, cur, axis=1)         # (T, L)
+        valid = (p >= 0) & valid_slot
+        pc = np.where(valid, p, 0)
+        f_s = np.take_along_axis(feat, pc, axis=1)
+        t_s = np.take_along_axis(thr, pc, axis=1)
+        isr = np.take_along_axis(came_right, cur, axis=1)
+        c_par = np.take_along_axis(cover, pc, axis=1)
+        c_ch = np.take_along_axis(cover, cur, axis=1)
+        z_s = np.where(c_par > 0, c_ch / np.where(c_par > 0, c_par, 1.0),
+                       0.0)
+        feat_e[..., s] = np.where(valid, f_s, -1)
+        lo_e[..., s] = np.where(valid & isr, t_s, -1)       # right: code > thr
+        hi_e[..., s] = np.where(valid & ~isr, t_s, BIG_BIN)  # left: code <= thr
+        z_e[..., s] = np.where(valid, z_s, 1.0)
+        cur = np.where(valid, pc, cur)
+    feat_e = feat_e[..., ::-1]
+    lo_e = lo_e[..., ::-1]
+    hi_e = hi_e[..., ::-1]
+    z_e = z_e[..., ::-1]
 
     # Merge duplicate features into the slot of their first occurrence:
-    # z multiplies, intervals intersect; non-first levels become padding.
+    # z multiplies, intervals intersect; non-first edges become padding.
+    # Inert edges (feat = -1) all merge into one slot that stays inert.
+    lvl = np.arange(depth)
     same = feat_e[:, :, :, None] == feat_e[:, :, None, :]   # (T, L, D, D)
-    first = np.argmax(same, axis=3)               # first level with this feat
-    group = first[:, :, None, :] == lvl[None, None, :, None]  # slot <- level
+    first = np.argmax(same, axis=3)               # first slot with this feat
+    group = first[:, :, None, :] == lvl[None, None, :, None]  # slot <- edge
     is_first = first == lvl[None, None, :]
     z_slot = np.prod(np.where(group, z_e[:, :, None, :], 1.0), axis=3)
     lo_slot = np.max(np.where(group, lo_e[:, :, None, :], -1), axis=3)
     hi_slot = np.min(np.where(group, hi_e[:, :, None, :], BIG_BIN), axis=3)
 
-    slot_feat = np.where(is_first, feat_e, -1).astype(np.int32)
-    slot_lo = np.where(is_first, lo_slot, -1).astype(np.int32)
-    slot_hi = np.where(is_first, hi_slot, BIG_BIN).astype(np.int32)
-    slot_z = np.where(is_first, z_slot, 1.0).astype(np.float32)
+    real = is_first & (feat_e >= 0)
+    slot_feat = np.where(real, feat_e, -1).astype(np.int32)
+    slot_lo = np.where(real, lo_slot, -1).astype(np.int32)
+    slot_hi = np.where(real, hi_slot, BIG_BIN).astype(np.int32)
+    slot_z = np.where(real, z_slot, 1.0).astype(np.float32)
     leaf_weight = np.prod(slot_z, axis=2, dtype=np.float64)
+    leaf_weight = np.where(valid_slot, leaf_weight, 0.0)
+    leaf_v = np.take_along_axis(leaf, slots[:, :, None], axis=1)
+    leaf_v = np.where(valid_slot[:, :, None], leaf_v, 0.0).astype(np.float32)
 
     return PathPack(slot_feat=jnp.asarray(slot_feat),
                     slot_lo=jnp.asarray(slot_lo),
                     slot_hi=jnp.asarray(slot_hi),
                     slot_z=jnp.asarray(slot_z),
-                    leaf_weight=jnp.asarray(leaf_weight.astype(np.float32)))
+                    leaf_weight=jnp.asarray(leaf_weight.astype(np.float32)),
+                    leaf=jnp.asarray(leaf_v))

@@ -39,7 +39,7 @@ def expected_values(pf, pack: Optional[PathPack] = None) -> jax.Array:
     that pair with path-dependent SHAP.
     """
     pack = build_path_pack(pf) if pack is None else pack
-    e_tree = jnp.einsum("tl,tlw->tw", pack.leaf_weight, pf.leaf)  # (T, w)
+    e_tree = jnp.einsum("tl,tlw->tw", pack.leaf_weight, pack.leaf)  # (T, w)
     if pf.leaf_width == pf.n_outputs:
         return pf.base + pf.lr * jnp.sum(e_tree, axis=0)
     scat = jax.ops.segment_sum(e_tree[:, 0], pf.out_col.astype(jnp.int32),
@@ -55,13 +55,13 @@ def _phi_path_dependent(pf, pack: PathPack, codes: jax.Array,
     mode, interp = kops.resolve_dispatch(mode)
     if mode != "jnp":
         return kops.tree_shap(codes, pack.slot_feat, pack.slot_lo,
-                              pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,
-                              pf.lr, n_outputs=d, depth=pf.depth,
+                              pack.slot_hi, pack.slot_z, pack.leaf,
+                              pf.out_col, pf.lr, n_outputs=d, depth=pf.depth,
                               interpret=interp)
     phi0 = jnp.zeros((n, m, d), jnp.float32)
     return ref.tree_shap_ref(phi0, codes, pack.slot_feat, pack.slot_lo,
-                             pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,
-                             pf.lr, depth=pf.depth)
+                             pack.slot_hi, pack.slot_z, pack.leaf,
+                             pf.out_col, pf.lr, depth=pf.depth)
 
 
 def _phi_interventional(pf, pack: PathPack, codes: jax.Array,
@@ -70,7 +70,7 @@ def _phi_interventional(pf, pack: PathPack, codes: jax.Array,
     phi0 = jnp.zeros((n, m, pf.n_outputs), jnp.float32)
     return ref.tree_shap_interventional_ref(
         phi0, codes, bg_codes, pack.slot_feat, pack.slot_lo, pack.slot_hi,
-        pf.leaf, pf.out_col, pf.lr, depth=pf.depth)
+        pack.leaf, pf.out_col, pf.lr, depth=pf.depth)
 
 
 def shap_values(pf, codes: jax.Array, *, algorithm: str = "path_dependent",

@@ -166,13 +166,22 @@ class CheckpointManager:
 # ---------------------------------------------------------------------------
 
 # Manifest format history:
-#   1 — PR 2: feat/thr/left/right/leaf/out_col/base/lr (+ quantizer).
+#   1 — PR 2: implicit-heap feat/thr/left/right/leaf/out_col/base/lr
+#       (+ quantizer); feat/thr span internal nodes only, leaf is indexed by
+#       leaf ordinal, left/right are redundant heap pointers.
 #   2 — PR 3: optional per-node ``cover`` + ``gain`` tensors ride along,
 #       enabling checkpoint-only explainability (TreeSHAP / importances).
+#   3 — PR 5: sparse-topology pointer format.  feat/thr/leaf span the
+#       unified node id space, left/right are load-bearing pointers
+#       (terminal self-loops), ``node_count`` rides along, and the static
+#       walk bound ``depth`` lives in the manifest (it parameterizes
+#       compiled loop lengths, so it is metadata, not an array).
 # Loaders are backward compatible: manifests without ``format_version`` are
-# v1; fields absent from the manifest load as ``None`` (explainability
-# degrades gracefully — prediction is unaffected).
-FOREST_FORMAT_VERSION = 2
+# v1; v1/v2 heap steps are upgraded in memory through
+# `core.forest.heap_packed_to_pointer` (bit-identical predictions); fields
+# absent from the manifest load as ``None`` (explainability degrades
+# gracefully — prediction is unaffected).
+FOREST_FORMAT_VERSION = 3
 
 
 def save_forest_checkpoint(root: str, packed, quantizer=None, *,
@@ -180,9 +189,9 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
                            keep_n: int = 3) -> None:
     """Checkpoint a `core.forest.PackedForest` (and its quantizer) for serving.
 
-    The forest is a flat pytree of arrays, so it rides the standard atomic
-    `CheckpointManager` format; the manifest records enough structure
-    (``kind``/``fields``/``has_quantizer``/``format_version``) for
+    The forest's array fields form a flat pytree, so they ride the standard
+    atomic `CheckpointManager` format; the manifest records enough structure
+    (``kind``/``fields``/``depth``/``has_quantizer``/``format_version``) for
     `load_forest_checkpoint` to rebuild without the caller supplying a
     template tree.  Optional tensors (``cover``/``gain``) are stored only
     when present — ``fields`` lists what the step actually contains.
@@ -191,14 +200,14 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
     the model.
     """
     forest_dict = {k: v for k, v in packed._asdict().items()
-                   if v is not None}
+                   if v is not None and k != "depth"}
     tree: Dict[str, Any] = {"forest": forest_dict}
     if quantizer is not None:
         tree["quantizer"] = {"edges": quantizer.edges,
                              "n_bins": np.int32(quantizer.n_bins)}
     meta = dict(metadata or {})
     meta.update(kind="packed_forest", fields=list(forest_dict),
-                has_quantizer=quantizer is not None,
+                has_quantizer=quantizer is not None, depth=int(packed.depth),
                 format_version=FOREST_FORMAT_VERSION)
     mgr = CheckpointManager(root, keep_n=keep_n, async_save=False)
     mgr.save(step, tree, metadata=meta)
@@ -207,11 +216,13 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
 def load_forest_checkpoint(root: str, step: Optional[int] = None):
     """Load a serving checkpoint: ``(PackedForest, Quantizer | None, meta)``.
 
-    Backward compatible with format_version 1 steps (no ``format_version``
-    key, no cover/gain tensors): the forest loads with those fields ``None``
-    — prediction works, explainability raises informative errors.
+    Backward compatible across the format history: v3 steps load verbatim
+    (``depth`` restored from the manifest); v1/v2 implicit-heap steps are
+    converted to the pointer topology in memory — predictions are
+    bit-identical, and a v1 step's missing cover/gain load as ``None``
+    (prediction works, explainability raises informative errors).
     """
-    from repro.core.forest import PackedForest
+    from repro.core.forest import PackedForest, heap_packed_to_pointer
     from repro.core.quantize import Quantizer
 
     mgr = CheckpointManager(root, async_save=False)
@@ -227,7 +238,15 @@ def load_forest_checkpoint(root: str, step: Optional[int] = None):
     if meta.get("has_quantizer"):
         like["quantizer"] = {"edges": 0, "n_bins": 0}
     tree, _ = mgr.restore(like, step)
-    packed = PackedForest(**tree["forest"])
+    f = tree["forest"]
+    if meta["format_version"] >= 3:
+        packed = PackedForest(**f, depth=int(meta["depth"]))
+    else:
+        # v1/v2 heap layout: left/right are redundant heap pointers and the
+        # leaf tensor is leaf-ordinal indexed — run the upgrade converter.
+        packed = heap_packed_to_pointer(
+            f["feat"], f["thr"], f["leaf"], f["out_col"], f["base"],
+            f["lr"], cover=f.get("cover"), gain=f.get("gain"))
     quantizer = None
     if meta.get("has_quantizer"):
         quantizer = Quantizer(edges=tree["quantizer"]["edges"],

@@ -99,41 +99,61 @@ def histogram_pallas(codes_t: jax.Array, node_pos: jax.Array, stats: jax.Array,
     )(codes_t, node_pos, stats)
 
 
-def _hist_tiles_kernel(codes_ref, stats_ref, out_ref, *, n_bins: int):
+HIST_DTYPES = ("float32", "bfloat16")
+
+
+def _hist_tiles_kernel(codes_ref, stats_ref, out_ref, *, n_bins: int,
+                       compute_dtype):
     code = codes_ref[0, :].astype(jnp.int32)              # (TN,)
     tn = code.shape[0]
     cols = jax.lax.broadcasted_iota(jnp.int32, (tn, n_bins), 1)
-    onehot = (code[:, None] == cols).astype(jnp.float32)  # (TN, B)
+    onehot = (code[:, None] == cols).astype(compute_dtype)  # (TN, B)
     out_ref[0, 0] = jax.lax.dot_general(
-        onehot, stats_ref[...],
+        onehot, stats_ref[...].astype(compute_dtype),
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)               # (B, C)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_bins", "row_tile", "interpret"))
+    jax.jit,
+    static_argnames=("n_bins", "row_tile", "hist_dtype", "interpret"))
 def hist_tiles_pallas(codes_t: jax.Array, stats: jax.Array, *, n_bins: int,
-                      row_tile: int = 256, interpret: bool = True) -> jax.Array:
+                      row_tile: int = 256, hist_dtype: str = "float32",
+                      interpret: bool = True) -> jax.Array:
     """Raw per-tile kernel entry (node-contiguous gathered inputs required —
-    use `ops.histogram_splits_level`).
+    use `ops.histogram_splits_level` / `ops.node_histogram`).
 
     Args:
       codes_t: (m, S) transposed bin codes in partition order, S a multiple
                of ``row_tile``; every tile of ``row_tile`` rows belongs to a
                single tree node (padding rows carry zero stats).
       stats:   (S, C) float32 statistics in the same order.
+      hist_dtype: MXU input dtype for the one-hot contraction.
+               ``"bfloat16"`` halves the stats-operand bytes feeding the MXU
+               (the sketched gradient channel — exactly the traffic the
+               paper's sketch already shrinks d -> k); accumulation stays
+               float32 (``preferred_element_type``), and the one-hot side is
+               exact in either dtype, so only the gradient channels round
+               (~2^-8 relative); the count channel is exact for integer
+               weights < 256.  The subtraction-drift bound under bf16 is
+               asserted in tests/test_hist_engine.py next to the fp32 bound.
     Returns:
       (m, S // row_tile, n_bins, C) float32 per-tile histograms; the caller
-      segment-sums tiles into nodes (`ops._tiles_to_nodes`).
+      segment-sums tiles into nodes.
     """
     m, s = codes_t.shape
     c = stats.shape[1]
     assert s % row_tile == 0
+    if hist_dtype not in HIST_DTYPES:
+        raise ValueError(f"unknown hist_dtype {hist_dtype!r}; "
+                         f"expected one of {HIST_DTYPES}")
+    compute_dtype = jnp.bfloat16 if hist_dtype == "bfloat16" else jnp.float32
     n_tiles = s // row_tile
     grid = (m, n_tiles)
 
     return pl.pallas_call(
-        functools.partial(_hist_tiles_kernel, n_bins=n_bins),
+        functools.partial(_hist_tiles_kernel, n_bins=n_bins,
+                          compute_dtype=compute_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, row_tile), lambda f, t: (f, t)),

@@ -186,7 +186,7 @@ def _tile_plan(counts: jax.Array, build_counts: jax.Array, *, n: int,
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "subtract",
                                              "row_tile", "m_tile", "lane_pad",
-                                             "interpret"))
+                                             "hist_dtype", "interpret"))
 def histogram_splits_level(codes: jax.Array, stats: jax.Array,
                            order: jax.Array, counts: jax.Array,
                            prev_hist: jax.Array | None,
@@ -195,6 +195,7 @@ def histogram_splits_level(codes: jax.Array, stats: jax.Array,
                            n_nodes: int, n_bins: int, subtract: bool = False,
                            row_tile: int = 256, m_tile: int = 8,
                            lane_pad: int | None = None,
+                           hist_dtype: str = "float32",
                            interpret: bool = True):
     """Fused partitioned hot path: tiles kernel -> sibling combine -> split scan.
 
@@ -240,7 +241,8 @@ def histogram_splits_level(codes: jax.Array, stats: jax.Array,
     stats_g = stats.astype(jnp.float32)[ri] * valid[:, None]
     stats_g = _pad_to(stats_g, lane_pad, axis=1)
     tiles = hist_tiles_pallas(codes_g.T, stats_g, n_bins=b_pad,
-                              row_tile=row_tile, interpret=interpret)
+                              row_tile=row_tile, hist_dtype=hist_dtype,
+                              interpret=interpret)
     nodes4 = jax.ops.segment_sum(tiles.transpose(1, 0, 2, 3), tile_node,
                                  num_segments=n_nodes,
                                  indices_are_sorted=True)  # (nodes, m, Bp, C)
@@ -264,22 +266,53 @@ def histogram_splits_level(codes: jax.Array, stats: jax.Array,
     return gain[:, 0], idx[:, 0], hist_native
 
 
+@functools.partial(jax.jit, static_argnames=("n_bins", "row_tile",
+                                             "lane_pad", "hist_dtype",
+                                             "interpret"))
+def node_histogram(codes_g: jax.Array, stats_g: jax.Array, *, n_bins: int,
+                   row_tile: int = 256, lane_pad: int | None = None,
+                   hist_dtype: str = "float32",
+                   interpret: bool = True) -> jax.Array:
+    """Single-node histogram over gathered rows: ``(m, n_bins, c)``.
+
+    The leaf-wise grower's kernel-path builder: ``codes_g`` (S, m) /
+    ``stats_g`` (S, c) hold ONE node's rows in partition order (padding rows
+    carry zero stats).  Rows are tiled through `hist_tiles_pallas` (every
+    tile trivially belongs to the node) and the per-tile histograms sum in
+    tile order — the same accumulation the level engine's per-node segment
+    sums perform.  Semantics contract: `core.histogram.node_hist_jnp`.
+    """
+    c = stats_g.shape[1]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    b_pad = n_bins + (-n_bins) % 8               # sublane-aligned bin axis
+    codes_t = _pad_to(codes_g.T.astype(jnp.int32), row_tile, axis=1)
+    stats_p = _pad_to(_pad_to(stats_g.astype(jnp.float32), lane_pad, axis=1),
+                      row_tile, axis=0)
+    tiles = hist_tiles_pallas(codes_t, stats_p, n_bins=b_pad,
+                              row_tile=row_tile, hist_dtype=hist_dtype,
+                              interpret=interpret)
+    return jnp.sum(tiles, axis=1)[:, :n_bins, :c]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("depth", "row_tile", "lane_pad",
                                     "interpret"),
                    donate_argnums=(0,))
 def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
-                 thr: jax.Array, leaf: jax.Array, out_col: jax.Array,
+                 thr: jax.Array, left: jax.Array, right: jax.Array,
+                 leaf: jax.Array, out_col: jax.Array,
                  lr, *, depth: int, row_tile: int = 256,
                  lane_pad: int | None = None,
                  interpret: bool = True) -> jax.Array:
     """Packed-forest traversal: ``F_init + lr * sum_t tree_t(codes)``.
 
-    Pads rows to ``row_tile`` and the feature / leaf-width / output axes to
-    ``lane_pad`` lanes, runs the traversal kernel over the ``(row_tiles,
-    trees)`` grid, and unpads.  Padded rows route somewhere harmless and are
-    sliced off; padded leaf columns are zero and the in-kernel placement
-    matrix never scatters them.  Semantics contract: `ref.forest_apply_ref`.
+    Pads rows to ``row_tile`` and the feature / node / leaf-width / output
+    axes to ``lane_pad`` lanes, runs the pointer-chasing traversal kernel
+    over the ``(row_tiles, trees)`` grid, and unpads.  Padded rows route
+    somewhere harmless and are sliced off; padded node slots are unreachable
+    (no real pointer targets them); padded leaf columns are zero and the
+    in-kernel placement matrix never scatters them.  Semantics contract:
+    `ref.forest_apply_ref`.
     """
     n, m = codes.shape
     d = F_init.shape[1]
@@ -291,11 +324,14 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
                   lane_pad, axis=1)
     feat_p = _pad_to(feat.astype(jnp.int32), lane_pad, axis=1)
     thr_p = _pad_to(thr.astype(jnp.int32), lane_pad, axis=1)
+    left_p = _pad_to(left.astype(jnp.int32), lane_pad, axis=1)
+    right_p = _pad_to(right.astype(jnp.int32), lane_pad, axis=1)
     leaf_p = _pad_to(_pad_to(leaf.astype(jnp.float32), lane_pad, axis=1),
                      lane_pad, axis=2)
     params = jnp.asarray([[lr]], jnp.float32)
     out = forest_traverse_pallas(params, out_col.astype(jnp.int32)[:, None],
-                                 F_p, codes_p, feat_p, thr_p, leaf_p,
+                                 F_p, codes_p, feat_p, thr_p, left_p,
+                                 right_p, leaf_p,
                                  depth=depth, leaf_width=w,
                                  row_tile=row_tile, interpret=interpret)
     return out[:n, :d]

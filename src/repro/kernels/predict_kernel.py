@@ -2,34 +2,41 @@
 
 Walks *every tree for a tile of rows* depth-by-depth on-device, the TPU
 analogue of the batched GPU tree traversals in XGBoost-GPU (Mitchell et al.,
-2018) and Zhang et al. (2017): instead of per-row pointer chasing, each level
-is a pair of one-hot contractions on the MXU.
+2018) and Zhang et al. (2017): instead of per-row pointer chasing in scalar
+code, each level is a handful of one-hot contractions on the MXU.
 
-For one row tile and one tree, level ``l`` maintains the in-level position
-``pos`` of every row (the perfect-heap invariant: children of level-relative
-position ``p`` are ``2p`` / ``2p+1``) and advances it with
+Trees arrive in the sparse-topology `core.forest.PackedForest` layout: a
+unified node id space with explicit ``left``/``right`` child pointers
+(terminal nodes self-loop), so one traversal serves level-wise heaps and
+leaf-wise best-first trees alike.  For one row tile and one tree, every
+level maintains the node id ``pos`` of each row and advances it with
 
-    sel   = onehot(pos)        @ onehot(feat_level)     (TN, NL) @ (NL, M)
-    code  = sum_f sel * codes                           (TN, 1)
-    thr   = onehot(pos)        @ thr_level              (TN, 1)
-    pos  <- 2*pos + [code > thr]
+    sel    = onehot(pos)  @ onehot(feat)          (TN, N) @ (N, M)
+    code   = sum_f sel * codes                    (TN, 1)
+    thr    = onehot(pos)  @ thr                   (TN, 1)
+    l, r   = onehot(pos)  @ [left | right]        (TN, 2) slot gathers
+    pos   <- code > thr ? r : l
 
-After ``depth`` levels ``pos`` is the leaf index; the leaf block is gathered
-with one more one-hot matmul and scattered into the output columns
+After ``depth`` levels ``pos`` is the terminal node (self-loops make extra
+iterations exact no-ops); the node-indexed leaf block is gathered with one
+more one-hot matmul and scattered into the output columns
 ``[out_col, out_col + leaf_width)`` through a placement matrix, so the same
 kernel serves full-width ``single_tree`` leaves (width d, out_col 0) and
 ``one_vs_all`` scalar leaves (width 1, out_col j).  Every contraction is an
-exact 0/1 selection — the kernel is bit-compatible with the gather-based
-reference (`ref.forest_apply_ref`), which the parity tests assert.
+exact 0/1 selection and pointer values are small exact float32 integers —
+the kernel is bit-compatible with the gather-based reference
+(`ref.forest_apply_ref`), which the parity tests assert.
 
 Grid = ``(row_tiles, trees)``; the output block for a row tile is revisited
 across the sequential tree axis (canonical Pallas accumulation: init from the
 ``F_init`` scores at ``t == 0``, then ``out += lr * contribution`` per tree —
 the same add order as the scan-based reference, so accumulation is also
-bit-identical).  VMEM working set per step: codes tile (TN x M x 4B) + leaf
-block (L x W x 4B) + out/init tiles (2 x TN x D x 4B) + the (TN, max(M, L))
-one-hot planes — with TN=256, M<=512, L=64, D<=128 that is ~1.8 MB,
-comfortably inside 16 MB VMEM.
+bit-identical).  VMEM working set per step: codes tile (TN x M x 4B) + node
+tensors (5 x N x 4B) + leaf block (N x W x 4B) + out/init tiles
+(2 x TN x D x 4B) + the (TN, max(M, N)) one-hot planes — with TN=256,
+M<=512, N=127 (depth-6 heap), D<=128 that is ~2 MB, comfortably inside
+16 MB VMEM.  Versus the heap-walk kernel this pays a ~2x wider one-hot
+plane per level (N vs the level width) in exchange for topology freedom.
 """
 from __future__ import annotations
 
@@ -42,8 +49,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _forest_kernel(params_ref, col_ref, init_ref, codes_ref, feat_ref,
-                   thr_ref, leaf_ref, out_ref, *, depth: int,
-                   leaf_width: int):
+                   thr_ref, left_ref, right_ref, leaf_ref, out_ref, *,
+                   depth: int, leaf_width: int):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -53,26 +60,30 @@ def _forest_kernel(params_ref, col_ref, init_ref, codes_ref, feat_ref,
     lr = params_ref[0, 0]
     codes = codes_ref[...].astype(jnp.float32)             # (TN, M)
     tn, m_pad = codes.shape
-    pos = jnp.zeros((tn, 1), jnp.int32)                    # in-level position
+    n_pad = feat_ref.shape[1]                              # node id space
+    feat_all = feat_ref[0, :]                              # (N,)
+    thr_all = thr_ref[0, :].astype(jnp.float32)
+    left_all = left_ref[0, :].astype(jnp.float32)          # exact small ints
+    right_all = right_ref[0, :].astype(jnp.float32)
+    feat_oh = (feat_all[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (n_pad, m_pad), 1)).astype(jnp.float32)
+    ptrs = jnp.stack([thr_all, left_all, right_all], axis=1)  # (N, 3)
+    pos = jnp.zeros((tn, 1), jnp.int32)                    # node id per row
 
-    for lvl in range(depth):
-        off, nl = 2 ** lvl - 1, 2 ** lvl                   # heap level slice
-        feat_lvl = feat_ref[0, off:off + nl]               # (NL,)
-        thr_lvl = thr_ref[0, off:off + nl]
+    for _ in range(depth):
         pos_oh = (pos == jax.lax.broadcasted_iota(
-            jnp.int32, (tn, nl), 1)).astype(jnp.float32)   # (TN, NL)
-        feat_oh = (feat_lvl[:, None] == jax.lax.broadcasted_iota(
-            jnp.int32, (nl, m_pad), 1)).astype(jnp.float32)
+            jnp.int32, (tn, n_pad), 1)).astype(jnp.float32)  # (TN, N)
         sel = jax.lax.dot_general(                         # (TN, M) row's split
             pos_oh, feat_oh,
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         code = jnp.sum(sel * codes, axis=1, keepdims=True)  # (TN, 1) exact
-        thr_v = jax.lax.dot_general(
-            pos_oh, thr_lvl.astype(jnp.float32)[:, None],
+        tlr = jax.lax.dot_general(                         # (TN, 3) thr/l/r
+            pos_oh, ptrs,
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        pos = pos * 2 + (code > thr_v).astype(jnp.int32)
+        go_right = code > tlr[:, 0:1]
+        pos = jnp.where(go_right, tlr[:, 2:3], tlr[:, 1:2]).astype(jnp.int32)
 
     l_pad = leaf_ref.shape[1]
     leaf_oh = (pos == jax.lax.broadcasted_iota(
@@ -100,7 +111,9 @@ def _forest_kernel(params_ref, col_ref, init_ref, codes_ref, feat_ref,
     static_argnames=("depth", "leaf_width", "row_tile", "interpret"))
 def forest_traverse_pallas(params: jax.Array, out_col: jax.Array,
                            F_init: jax.Array, codes: jax.Array,
-                           feat: jax.Array, thr: jax.Array, leaf: jax.Array,
+                           feat: jax.Array, thr: jax.Array,
+                           left: jax.Array, right: jax.Array,
+                           leaf: jax.Array,
                            *, depth: int, leaf_width: int,
                            row_tile: int = 256,
                            interpret: bool = True) -> jax.Array:
@@ -111,18 +124,20 @@ def forest_traverse_pallas(params: jax.Array, out_col: jax.Array,
       out_col: (T, 1) int32 starting output column per tree (SMEM scalars).
       F_init:  (n, D) float32 initial scores, accumulated in place per tree.
       codes:   (n, M) int32 binned features.  n % row_tile == 0.
-      feat, thr: (T, H) int32 heap split features / thresholds, H >= 2^depth-1.
-      leaf:    (T, L, W) float32 leaf blocks, L >= 2^depth; columns beyond
-               ``leaf_width`` must be zero padding.
+      feat, thr, left, right: (T, N) int32 node tensors; terminal nodes
+               self-loop (left == right == own id); padded node slots are
+               never reachable from node 0.
+      leaf:    (T, N, W) float32 node-indexed leaf blocks (same padded node
+               axis as feat); columns beyond ``leaf_width`` must be zero.
     Returns:
       (n, D) float32 scores ``F_init + lr * sum_t tree_t(codes)``.
     """
     n_pad, m_pad = codes.shape
-    n_trees, h_pad = feat.shape
+    n_trees, node_pad = feat.shape
     l_pad, w_pad = leaf.shape[1], leaf.shape[2]
     d_pad = F_init.shape[1]
-    assert n_pad % row_tile == 0 and h_pad >= 2 ** depth - 1
-    assert l_pad >= 2 ** depth and w_pad >= leaf_width
+    assert n_pad % row_tile == 0 and l_pad == node_pad
+    assert w_pad >= leaf_width and node_pad < 2 ** 24  # exact f32 pointers
     grid = (n_pad // row_tile, n_trees)
 
     return pl.pallas_call(
@@ -134,11 +149,13 @@ def forest_traverse_pallas(params: jax.Array, out_col: jax.Array,
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((row_tile, d_pad), lambda r, t: (r, 0)),
             pl.BlockSpec((row_tile, m_pad), lambda r, t: (r, 0)),
-            pl.BlockSpec((1, h_pad), lambda r, t: (t, 0)),
-            pl.BlockSpec((1, h_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
             pl.BlockSpec((1, l_pad, w_pad), lambda r, t: (t, 0, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, d_pad), lambda r, t: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), jnp.float32),
         interpret=interpret,
-    )(params, out_col, F_init, codes, feat, thr, leaf)
+    )(params, out_col, F_init, codes, feat, thr, left, right, leaf)

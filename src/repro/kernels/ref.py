@@ -90,36 +90,62 @@ def split_scan_ref(hist: jax.Array, lam: jax.Array, min_data: jax.Array,
     return best, idx
 
 
+@functools.partial(jax.jit, static_argnames=("depth",))
+def node_walk_ref(feat: jax.Array, thr: jax.Array, left: jax.Array,
+                  right: jax.Array, codes: jax.Array, *, depth: int
+                  ) -> jax.Array:
+    """Pointer-chasing walk of ONE sparse-topology tree: terminal node ids.
+
+    ``left``/``right`` are explicit child pointers over a unified node id
+    space; terminal nodes self-loop (``left[i] == right[i] == i``), so the
+    walk is depth-synchronous with a fixed ``depth`` iteration bound — extra
+    iterations past a terminal node are exact no-ops.  This is the per-tree
+    oracle every packed-forest consumer (predict kernel, SHAP paths, apply
+    embeddings) is tested against.
+    """
+    n = codes.shape[0]
+    pos = jnp.zeros((n,), jnp.int32)
+    for _ in range(depth):
+        fi = feat[pos]
+        code = codes[jnp.arange(n), fi].astype(jnp.int32)
+        bit = code > thr[pos]
+        pos = jnp.where(bit, right[pos], left[pos]).astype(jnp.int32)
+    return pos
+
+
 @functools.partial(jax.jit, static_argnames=("depth",), donate_argnums=(0,))
 def forest_apply_ref(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
-                     thr: jax.Array, leaf: jax.Array, out_col: jax.Array,
+                     thr: jax.Array, left: jax.Array, right: jax.Array,
+                     leaf: jax.Array, out_col: jax.Array,
                      lr: jax.Array, *, depth: int) -> jax.Array:
-    """Oracle for the packed-forest traversal kernel (gather-based walk).
+    """Oracle for the packed-forest traversal kernel (pointer-chasing walk).
 
     Args:
       F_init:  (n, d) float32 initial scores (donated; accumulated per tree).
       codes:   (n, m) binned features.
-      feat, thr: (T, 2^depth - 1) int32 heap split features / thresholds
-                 (go left when ``code <= thr``).
-      leaf:    (T, 2^depth, w) float32 leaf blocks.
+      feat, thr: (T, N) int32 per-node split features / thresholds in the
+                 unified node id space (go left when ``code <= thr``; unused
+                 on terminal nodes).
+      left, right: (T, N) int32 explicit child pointers; terminal nodes
+                 self-loop (``left[i] == right[i] == i``), so trees of
+                 arbitrary topology (level-wise heaps, leaf-wise best-first
+                 trees) walk under one fixed ``depth`` bound.
+      leaf:    (T, N, w) float32 node-indexed leaf blocks (zero on internal
+               nodes).
       out_col: (T,) int32 starting output column of each tree's leaf block
                (0 for full-width trees, the output index for one-vs-all).
     Returns:
       (n, d) float32 ``F_init + lr * sum_t tree_t(codes)``, accumulated
       tree-by-tree in scan order — bit-identical to `tree.predict_forest`
-      for full-width trees and to the Pallas kernel's grid order.
+      for heap-canonicalized full-width trees and to the Pallas kernel's
+      grid order.
     """
     n = codes.shape[0]
     w = leaf.shape[2]
 
     def body(acc, tree_arrays):
-        f, th, v, col = tree_arrays
-        pos = jnp.zeros((n,), jnp.int32)
-        for lvl in range(depth):
-            heap = pos + (2 ** lvl - 1)
-            fi = f[heap]
-            code = codes[jnp.arange(n), fi].astype(jnp.int32)
-            pos = pos * 2 + (code > th[heap]).astype(jnp.int32)
+        f, th, lft, rgt, v, col = tree_arrays
+        pos = node_walk_ref(f, th, lft, rgt, codes, depth=depth)
         contrib = lr * v[pos]                              # (n, w)
         if w == acc.shape[1]:          # full-width leaf block: col is 0
             acc = acc + contrib
@@ -129,7 +155,8 @@ def forest_apply_ref(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
         return acc, None
 
     acc, _ = jax.lax.scan(body, F_init.astype(jnp.float32),
-                          (feat, thr, leaf, out_col.astype(jnp.int32)))
+                          (feat, thr, left, right, leaf,
+                           out_col.astype(jnp.int32)))
     return acc
 
 
@@ -237,7 +264,10 @@ def _scatter_contribs(acc, contrib, sf, leaf_v, col, lr):
     Slot -> feature is an exact one-hot selection (unique features per path,
     so at most one non-zero per (leaf, feature)); leaf -> output reduction is
     a single (n*m, L) x (L, w) contraction — the same contraction shapes the
-    Pallas kernel uses, keeping the two bit-identical.
+    Pallas kernel uses, keeping the two bit-identical within the aligned
+    depth-3 shape envelope (beyond it, XLA's per-program FMA/fusion choices
+    cap cross-program agreement at float32 add-order noise; the parity
+    tests document both regimes).
     """
     n, m_feats, d = acc.shape
     L, w = leaf_v.shape

@@ -1,9 +1,6 @@
 """Explainability subsystem: TreeSHAP local accuracy, kernel/oracle bit
 parity, importances, leaf embeddings, cover packing, and the versioned
 checkpoint + explanation serving path."""
-import json
-import os
-
 import numpy as np
 import pytest
 
@@ -105,10 +102,10 @@ def test_shap_kernel_multi_tile_and_padding():
     pf = m.packed
     phi0 = jnp.zeros((70, 6, 4), jnp.float32)
     r = ref.tree_shap_ref(phi0, codes, pack.slot_feat, pack.slot_lo,
-                          pack.slot_hi, pack.slot_z, pf.leaf, pf.out_col,
+                          pack.slot_hi, pack.slot_z, pack.leaf, pf.out_col,
                           pf.lr, depth=pf.depth)
     k = ops.tree_shap(codes, pack.slot_feat, pack.slot_lo, pack.slot_hi,
-                      pack.slot_z, pf.leaf, pf.out_col, pf.lr,
+                      pack.slot_z, pack.leaf, pf.out_col, pf.lr,
                       n_outputs=4, depth=pf.depth, row_tile=32,
                       interpret=True)
     np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
@@ -135,11 +132,14 @@ def test_cover_heap_consistency():
     m, X, _ = _fit(seed=51)
     pf = m.packed
     cover = np.asarray(pf.cover)
-    H = pf.feat.shape[1]
-    for i in range(H):
-        np.testing.assert_allclose(cover[:, i],
-                                   cover[:, 2 * i + 1] + cover[:, 2 * i + 2],
-                                   rtol=1e-6)
+    left = np.asarray(pf.left)
+    right = np.asarray(pf.right)
+    internal = left != np.arange(pf.n_nodes)[None, :]
+    for t in range(pf.n_trees):
+        ii = np.flatnonzero(internal[t])
+        np.testing.assert_allclose(cover[t, ii],
+                                   cover[t, left[t, ii]]
+                                   + cover[t, right[t, ii]], rtol=1e-6)
     np.testing.assert_allclose(cover[:, 0], X.shape[0], rtol=1e-6)
 
 
@@ -170,9 +170,9 @@ def test_python_loop_packs_same_cover():
 def test_path_pack_slots_are_merged_and_padded():
     m, X, _ = _fit(seed=61)
     pack = EX.build_path_pack(m.packed)
-    sf = np.asarray(pack.slot_feat)             # (T, L, D)
+    sf = np.asarray(pack.slot_feat)             # (T, N, D)
     z = np.asarray(pack.slot_z)
-    # Unique features per (tree, leaf): no feature id repeats across slots.
+    # Unique features per (tree, path): no feature id repeats across slots.
     T_, L, D = sf.shape
     for t in range(T_):
         for leaf in range(L):
@@ -180,7 +180,8 @@ def test_path_pack_slots_are_merged_and_padded():
             assert len(real) == len(set(real.tolist()))
     # Padding slots are inert null players.
     np.testing.assert_array_equal(z[sf == -1], 1.0)
-    # Leaf weights are probabilities summing to ~1 on non-degenerate trees.
+    # Terminal weights are probabilities summing to ~1 on non-degenerate
+    # trees (ragged-path padding carries weight 0).
     lw = np.asarray(pack.leaf_weight)
     np.testing.assert_allclose(lw.sum(axis=1), 1.0, atol=1e-5)
 
@@ -220,11 +221,14 @@ def test_apply_matches_tree_walk():
     codes = m._bin(X)
     emb = np.asarray(m.apply(X))
     assert emb.shape == (X.shape[0], m.packed.n_trees)
+    # Heap-canonical trees: terminal node id = 2^D - 1 + leaf ordinal from
+    # the legacy heap walk.
+    H = 2 ** m.packed.depth - 1
     for t in (0, m.packed.n_trees - 1):
-        expect = np.asarray(T.tree_leaf_index(m.packed.feat[t],
-                                              m.packed.thr[t], codes,
+        expect = np.asarray(T.tree_leaf_index(m.packed.feat[t][:H],
+                                              m.packed.thr[t][:H], codes,
                                               depth=m.packed.depth))
-        np.testing.assert_array_equal(emb[:, t], expect)
+        np.testing.assert_array_equal(emb[:, t], H + expect)
 
 
 # ---------------------------------------------------------------------------
@@ -239,7 +243,7 @@ def test_checkpoint_format_version_roundtrip(tmp_path):
     save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
                            metadata={"loss": "multiclass"})
     pf, q, meta = load_forest_checkpoint(str(tmp_path))
-    assert meta["format_version"] == FOREST_FORMAT_VERSION == 2
+    assert meta["format_version"] == FOREST_FORMAT_VERSION == 3
     np.testing.assert_array_equal(np.asarray(pf.cover),
                                   np.asarray(m.packed.cover))
     np.testing.assert_array_equal(np.asarray(pf.gain),
@@ -251,24 +255,47 @@ def test_checkpoint_format_version_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def save_legacy_heap_checkpoint(root, m, *, version, metadata):
+    """Emit a v1/v2-era implicit-heap checkpoint from a fitted model: feat/
+    thr span internal nodes only, leaf is leaf-ordinal indexed, left/right
+    are redundant heap pointers, and v1 manifests carry no version key."""
+    from repro.io.checkpoint import CheckpointManager
+    pf = m.packed
+    H = 2 ** pf.depth - 1
+    idx = np.arange(H, dtype=np.int32)
+    heap = {
+        "feat": np.asarray(pf.feat[:, :H]),
+        "thr": np.asarray(pf.thr[:, :H]),
+        "left": np.tile(2 * idx + 1, (pf.n_trees, 1)),
+        "right": np.tile(2 * idx + 2, (pf.n_trees, 1)),
+        "leaf": np.asarray(pf.leaf[:, H:]),
+        "out_col": np.asarray(pf.out_col),
+        "base": np.asarray(pf.base),
+        "lr": np.asarray(pf.lr),
+    }
+    if version >= 2:
+        heap["cover"] = np.asarray(pf.cover)
+        heap["gain"] = np.asarray(pf.gain[:, :H])
+    tree = {"forest": heap,
+            "quantizer": {"edges": np.asarray(m.quantizer.edges),
+                          "n_bins": np.int32(m.quantizer.n_bins)}}
+    meta = dict(metadata)
+    meta.update(kind="packed_forest", fields=list(heap), has_quantizer=True)
+    if version >= 2:
+        meta["format_version"] = version
+    mgr = CheckpointManager(root, async_save=False)
+    mgr.save(0, tree, metadata=meta)
+
+
 def test_old_checkpoint_loads_with_importances_disabled(tmp_path):
     """Satellite: a format_version-1 checkpoint (no cover/gain, no version
-    key) loads and predicts; importances/SHAP are disabled, not a crash."""
-    from repro.io.checkpoint import (load_forest_checkpoint,
-                                     save_forest_checkpoint)
+    key, heap layout) loads through the heap->pointer converter and
+    predicts; importances/SHAP are disabled, not a crash."""
+    from repro.io.checkpoint import load_forest_checkpoint
     from repro.training.serve_lib import ForestServer
     m, X, _ = _fit(seed=83)
-    old = m.packed._replace(cover=None, gain=None)   # pre-v2 field set
-    save_forest_checkpoint(str(tmp_path), old, m.quantizer,
-                           metadata={"loss": "multiclass"})
-    # Strip the version key to simulate a manifest written before PR 3.
-    man_path = os.path.join(str(tmp_path), "step_0", "manifest.json")
-    with open(man_path) as f:
-        man = json.load(f)
-    del man["metadata"]["format_version"]
-    with open(man_path, "w") as f:
-        json.dump(man, f)
-
+    save_legacy_heap_checkpoint(str(tmp_path), m, version=1,
+                                metadata={"loss": "multiclass"})
     pf, q, meta = load_forest_checkpoint(str(tmp_path))
     assert meta["format_version"] == 1
     assert pf.cover is None and pf.gain is None

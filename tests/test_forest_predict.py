@@ -17,46 +17,89 @@ from repro.kernels import ops, ref
 # Traversal kernel vs gather-based oracle (interpret mode)
 # ---------------------------------------------------------------------------
 
-def _random_packed_problem(seed, n, m, depth, n_trees, w, d):
+def _random_packed_problem(seed, n, m, depth, n_trees, w, d,
+                           topology="heap"):
+    """Random pointer-forest problem.  ``topology="heap"`` canonicalizes
+    random perfect heaps; ``"sparse"`` grows random creation-order
+    node lists (children get the next two ids) like the leaf-wise grower."""
     rng = np.random.default_rng(seed)
-    H = 2 ** depth - 1
-    L = 2 ** depth
     codes = jnp.asarray(rng.integers(0, 16, (n, m)), jnp.uint8)
-    feat = jnp.asarray(rng.integers(0, m, (n_trees, H)), jnp.int32)
-    thr = jnp.asarray(rng.integers(0, 16, (n_trees, H)), jnp.int32)
-    leaf = jnp.asarray(rng.normal(size=(n_trees, L, w)).astype(np.float32))
     out_col = jnp.asarray(rng.integers(0, d - w + 1, (n_trees,)), jnp.int32)
     F0 = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
-    return codes, feat, thr, leaf, out_col, F0
+    if topology == "heap":
+        H = 2 ** depth - 1
+        L = 2 ** depth
+        feat_h = jnp.asarray(rng.integers(0, m, (n_trees, H)), jnp.int32)
+        thr_h = jnp.asarray(rng.integers(0, 16, (n_trees, H)), jnp.int32)
+        leaf_h = jnp.asarray(
+            rng.normal(size=(n_trees, L, w)).astype(np.float32))
+        feat, thr, left, right, leaf = T.heap_to_node_arrays(feat_h, thr_h,
+                                                             leaf_h)
+        return codes, feat, thr, left, right, leaf, out_col, F0
+    # Random sparse topology: repeatedly expand a random frontier leaf
+    # whose depth is < depth, creation-order numbering.
+    N = 2 ** (depth + 1) - 1
+    feat = np.zeros((n_trees, N), np.int32)
+    thr = np.zeros((n_trees, N), np.int32)
+    left = np.tile(np.arange(N, dtype=np.int32), (n_trees, 1))
+    right = left.copy()
+    leaf = np.zeros((n_trees, N, w), np.float32)
+    for t in range(n_trees):
+        frontier, depths, count = [0], {0: 0}, 1
+        n_exp = rng.integers(1, (N - 1) // 2 + 1)
+        for _ in range(n_exp):
+            open_ = [x for x in frontier if depths[x] < depth]
+            if not open_:
+                break
+            p = int(rng.choice(open_))
+            frontier.remove(p)
+            c1, c2 = count, count + 1
+            count += 2
+            feat[t, p] = rng.integers(0, m)
+            thr[t, p] = rng.integers(0, 15)
+            left[t, p], right[t, p] = c1, c2
+            depths[c1] = depths[c2] = depths[p] + 1
+            frontier += [c1, c2]
+        for x in frontier:
+            leaf[t, x] = rng.normal(size=(w,))
+    return (codes, jnp.asarray(feat), jnp.asarray(thr), jnp.asarray(left),
+            jnp.asarray(right), jnp.asarray(leaf), out_col, F0)
 
 
+@pytest.mark.parametrize("topology", ["heap", "sparse"])
 @pytest.mark.parametrize("n,m,depth,n_trees,w,d", [
     (64, 4, 1, 1, 3, 3),        # single depth-1 tree, full width
     (128, 6, 3, 5, 4, 4),       # full-width leaves (single_tree shape)
     (200, 5, 3, 6, 1, 4),       # width-1 leaves + out_col (one_vs_all shape)
     (70, 3, 4, 2, 2, 6),        # block narrower than d, non-multiple rows
 ])
-def test_traversal_kernel_matches_ref(n, m, depth, n_trees, w, d):
-    codes, feat, thr, leaf, out_col, F0 = _random_packed_problem(
-        n + m + depth, n, m, depth, n_trees, w, d)
-    r = ref.forest_apply_ref(F0.copy(), codes, feat, thr, leaf, out_col,
-                             jnp.float32(0.1), depth=depth)
-    k = ops.forest_apply(F0.copy(), codes, feat, thr, leaf, out_col, 0.1,
-                         depth=depth, row_tile=32, interpret=True)
+def test_traversal_kernel_matches_ref(n, m, depth, n_trees, w, d, topology):
+    codes, feat, thr, left, right, leaf, out_col, F0 = \
+        _random_packed_problem(n + m + depth, n, m, depth, n_trees, w, d,
+                               topology=topology)
+    r = ref.forest_apply_ref(F0.copy(), codes, feat, thr, left, right, leaf,
+                             out_col, jnp.float32(0.1), depth=depth)
+    k = ops.forest_apply(F0.copy(), codes, feat, thr, left, right, leaf,
+                         out_col, 0.1, depth=depth, row_tile=32,
+                         interpret=True)
     # Every kernel contraction is an exact 0/1 selection: bit parity.
     np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
 
 
 def test_traversal_ref_matches_tree_walk():
-    """The oracle's heap walk == tree.tree_leaf_index routing."""
-    codes, feat, thr, leaf, out_col, F0 = _random_packed_problem(
-        0, 96, 5, 3, 4, 3, 3)
-    out = ref.forest_apply_ref(jnp.zeros_like(F0), codes, feat, thr, leaf,
-                               out_col * 0, jnp.float32(1.0), depth=3)
+    """The oracle's pointer walk == tree.tree_leaf_index heap routing on
+    canonicalized heaps (leaf j of a depth-D tree is node 2^D - 1 + j)."""
+    codes, feat, thr, left, right, leaf, out_col, F0 = \
+        _random_packed_problem(0, 96, 5, 3, 4, 3, 3)
+    out = ref.forest_apply_ref(jnp.zeros_like(F0), codes, feat, thr, left,
+                               right, leaf, out_col * 0, jnp.float32(1.0),
+                               depth=3)
+    H = 2 ** 3 - 1
     expect = np.zeros(F0.shape, np.float32)
     for t in range(4):
-        pos = np.asarray(T.tree_leaf_index(feat[t], thr[t], codes, depth=3))
-        expect += np.asarray(leaf)[t][pos]
+        pos = np.asarray(T.tree_leaf_index(feat[t, :H], thr[t, :H], codes,
+                                           depth=3))
+        expect += np.asarray(leaf)[t][H + pos]
     np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6, atol=1e-6)
 
 
@@ -134,17 +177,30 @@ def test_pack_unpack_roundtrip():
 
 
 def test_packed_child_pointers_are_heap():
+    """Level-wise training canonicalizes to heap pointers: internal node i
+    points at 2i+1 / 2i+2, leaves self-loop, node_count fills the space."""
     X, y = make_tabular("multiclass", 200, 5, 3, seed=15)
     m = SketchBoost(GBDTConfig(loss="multiclass", n_trees=2, depth=3,
                                learning_rate=0.3)).fit(X, y)
     pf = m.packed
+    assert pf.is_heap and pf.depth == 3
     H = 2 ** pf.depth - 1
+    N = 2 * H + 1
+    assert pf.n_nodes == N
     idx = np.arange(H)
     for t in range(pf.n_trees):
-        np.testing.assert_array_equal(np.asarray(pf.left)[t], 2 * idx + 1)
-        np.testing.assert_array_equal(np.asarray(pf.right)[t], 2 * idx + 2)
-    # Leaves in global numbering start right after the internal nodes.
-    assert int(np.asarray(pf.left)[0, -1]) == H + pf.n_leaves - 2
+        np.testing.assert_array_equal(np.asarray(pf.left)[t, :H],
+                                      2 * idx + 1)
+        np.testing.assert_array_equal(np.asarray(pf.right)[t, :H],
+                                      2 * idx + 2)
+        # Terminal nodes (the old leaf block) self-loop.
+        np.testing.assert_array_equal(np.asarray(pf.left)[t, H:],
+                                      np.arange(H, N))
+        np.testing.assert_array_equal(np.asarray(pf.right)[t, H:],
+                                      np.arange(H, N))
+        # Internal nodes carry no leaf payload.
+        assert np.all(np.asarray(pf.leaf)[t, :H] == 0.0)
+    np.testing.assert_array_equal(np.asarray(pf.node_count), N)
 
 
 # ---------------------------------------------------------------------------

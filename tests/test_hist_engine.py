@@ -196,6 +196,90 @@ def test_fused_level_op_matches_direct(subtract):
                                    rtol=1e-4, atol=1e-4)
 
 
+def test_hist_tiles_kernel_bf16_fp32_accumulation():
+    """Satellite: hist_dtype='bfloat16' rounds the MXU *inputs* only —
+    accumulation stays fp32, so gradient channels match the fp32 oracle to
+    bf16 input rounding (~2^-8 relative) and the count channel (small
+    integer weights, exact in bf16) stays integer-exact."""
+    from repro.kernels.hist_kernel import hist_tiles_pallas
+    ks = jax.random.split(jax.random.key(0), 2)
+    m, tn, tiles, B, c = 4, 64, 3, 16, 4
+    codes_t = jax.random.randint(ks[0], (m, tn * tiles), 0, B, jnp.int32)
+    grads = jax.random.normal(ks[1], (tn * tiles, c - 1), jnp.float32)
+    stats = jnp.concatenate([grads, jnp.ones((tn * tiles, 1))], axis=1)
+    out_bf = hist_tiles_pallas(codes_t, stats, n_bins=B, row_tile=tn,
+                               hist_dtype="bfloat16", interpret=True)
+    out_fp = ref.histogram_tiles_ref(codes_t, stats, n_bins=B, row_tile=tn)
+    assert out_bf.dtype == jnp.float32
+    scale = float(jnp.max(jnp.abs(out_fp)))
+    drift = float(jnp.max(jnp.abs(out_bf - out_fp)))
+    assert drift <= 1e-2 * scale, (drift, scale)
+    # Count channel: sums of exact bf16 ones are exact in fp32 accumulation.
+    np.testing.assert_array_equal(np.asarray(out_bf[..., -1]),
+                                  np.asarray(out_fp[..., -1]))
+    with pytest.raises(ValueError):
+        hist_tiles_pallas(codes_t, stats, n_bins=B, row_tile=tn,
+                          hist_dtype="float16", interpret=True)
+
+
+def test_subtraction_drift_bounded_bf16():
+    """Satellite: the sibling-subtraction drift assertion, mirrored at
+    bf16 — ``parent − built`` cancellation on bf16-rounded inputs stays
+    within the documented ~2^-8-relative envelope (vs 1e-3 absolute at
+    fp32; see docs/performance.md)."""
+    n, m, B, depth = 520, 6, 16, 4
+    codes, stats, _, _ = _rand_problem(21, n=n, m=m, B=B, depth=depth)
+    prev = None
+    for lvl, (state, node_pos) in enumerate(
+            _routed_state(codes, stats, depth, B)):
+        n_nodes = 2 ** lvl
+        _, _, prev = ops.histogram_splits_level(
+            codes, stats, state.order, state.counts, prev,
+            jnp.float32(1.0), jnp.float32(1.0), n_nodes=n_nodes, n_bins=B,
+            subtract=lvl > 0, row_tile=64, hist_dtype="bfloat16",
+            interpret=True)
+        direct = H.build_histograms_jnp(codes, node_pos, stats,
+                                        n_nodes=n_nodes, n_bins=B)
+        c = stats.shape[1]
+        hist4 = prev.reshape(m, n_nodes, B, -1)[..., :c].transpose(
+            1, 0, 2, 3)
+        scale = max(float(jnp.max(jnp.abs(direct))), 1.0)
+        drift = float(jnp.max(jnp.abs(hist4 - direct)))
+        # bf16 inputs round at 2^-8 relative; the subtraction chain can at
+        # most double it per level.
+        assert drift <= 4e-2 * scale, (lvl, drift, scale)
+
+
+def test_grow_tree_bf16_close_to_fp32():
+    """End-to-end: a bf16-stats tree picks identical splits on this fixed
+    seed (near-ties closer than the bf16 rounding envelope may legally flip
+    on other seeds — same caveat as the fp32 subtraction bound) and then
+    bit-identical leaf values (the leaf pass always runs fp32 on the full
+    gradients)."""
+    codes, stats, G, Hd = _rand_problem(30, n=450, m=8, B=16, depth=4)
+    kw = dict(depth=4, n_bins=16, lam=1.0, use_kernel="interpret")
+    t32, _ = T.grow_tree(codes, stats, G, Hd, hist_engine="subtract", **kw)
+    t16, _ = T.grow_tree(codes, stats, G, Hd, hist_engine="subtract",
+                         hist_dtype="bfloat16", **kw)
+    np.testing.assert_array_equal(np.asarray(t32.feat), np.asarray(t16.feat))
+    np.testing.assert_array_equal(np.asarray(t32.thr), np.asarray(t16.thr))
+    np.testing.assert_allclose(np.asarray(t32.value), np.asarray(t16.value),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_leafwise_bf16_smoke():
+    """bf16 stats channel rides the leaf-wise per-node builder too."""
+    codes, stats, G, Hd = _rand_problem(23, n=300, m=6, B=16, depth=3)
+    kw = dict(depth=3, max_leaves=8, n_bins=16, lam=1.0,
+              use_kernel="interpret")
+    t32, p32 = T.grow_tree_leafwise(codes, stats, G, Hd, **kw)
+    t16, p16 = T.grow_tree_leafwise(codes, stats, G, Hd,
+                                    hist_dtype="bfloat16", **kw)
+    np.testing.assert_array_equal(np.asarray(p32), np.asarray(p16))
+    np.testing.assert_allclose(np.asarray(t32.value), np.asarray(t16.value),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_fused_level_op_lane_padding_zero():
     """Lane-padding channels of the carried native hist stay exactly zero
     through subtraction (parent − built cannot leak into padding)."""

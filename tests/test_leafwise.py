@@ -1,0 +1,470 @@
+"""Leaf-wise (best-first) growth end-to-end: level-wise equivalence at full
+leaf budget, strict quality wins at equal budgets, sparse-topology
+PackedForest round trips, per-tree oracle bit parity (jnp + interpret
+kernels), v2->v3 checkpoint upgrades, and config validation."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forest as FO
+from repro.core import histogram as H
+from repro.core import tree as T
+from repro.core.boosting import GBDTConfig, SketchBoost
+from repro.data.pipeline import make_tabular
+from repro.kernels import ref
+
+
+def _plain_data(seed, n=500, m=8, d=5):
+    """Random data without knife-edge split ties (see test_hist_engine)."""
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, m)).astype(np.float32),
+            rng.integers(0, d, n).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Grower-level: partition invariants + level-wise reproduction
+# ---------------------------------------------------------------------------
+
+def test_node_partition_split_invariants():
+    n = 257
+    rng = np.random.default_rng(0)
+    part = H.init_node_partition(n, 7)
+    bits = jnp.asarray(rng.integers(0, 2, n).astype(np.int32))
+    part = H.split_partition_at(part, jnp.int32(0), jnp.int32(1),
+                                jnp.int32(2), bits, jnp.bool_(True))
+    order = np.asarray(part.order)
+    node = np.asarray(part.node_perm)
+    counts = np.asarray(part.counts)
+    b = np.asarray(bits)
+    assert sorted(order.tolist()) == list(range(n))
+    assert counts[1] == (b == 0).sum() and counts[2] == (b == 1).sum()
+    # Left rows first, then right rows; each side keeps dataset order.
+    np.testing.assert_array_equal(order[:counts[1]], np.flatnonzero(b == 0))
+    np.testing.assert_array_equal(order[counts[1]:counts[1] + counts[2]],
+                                  np.flatnonzero(b == 1))
+    np.testing.assert_array_equal(node[:counts[1]], 1)
+    # Split child 1 again; child 2's segment must be untouched.
+    bits2 = jnp.asarray(rng.integers(0, 2, n).astype(np.int32))
+    part2 = H.split_partition_at(part, jnp.int32(1), jnp.int32(3),
+                                 jnp.int32(4), bits2, jnp.bool_(True))
+    np.testing.assert_array_equal(
+        np.asarray(part2.order)[counts[1]:counts[1] + counts[2]],
+        order[counts[1]:counts[1] + counts[2]])
+    # do=False is an exact no-op.
+    part3 = H.split_partition_at(part2, jnp.int32(2), jnp.int32(5),
+                                 jnp.int32(6), bits2, jnp.bool_(False))
+    for a, b_ in zip(part3, part2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+def test_leafwise_full_budget_reproduces_levelwise_tree(mode):
+    """One tree, max_leaves = 2^depth, every node splits: identical splits
+    and bit-identical routing/values to the level-wise subtract engine."""
+    rng = np.random.default_rng(3)
+    n, m, B, depth = 400, 6, 16, 3
+    codes = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.uint8))
+    G = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    Hd = jnp.ones((n, 4), jnp.float32)
+    stats = jnp.concatenate([G, jnp.ones((n, 1), jnp.float32)], axis=1)
+    kw = dict(depth=depth, n_bins=B, lam=1.0, use_kernel=mode)
+    t_lvl, pos_lvl = T.grow_tree(codes, stats, G, Hd,
+                                 hist_engine="subtract", **kw)
+    t_lw, pos_lw = T.grow_tree_leafwise(codes, stats, G, Hd,
+                                        max_leaves=2 ** depth, **kw)
+    # Same rows per leaf (node ids differ: heap level-order vs creation
+    # order), same leaf values on matching rows.
+    lvl_vals = np.asarray(t_lvl.value)[np.asarray(pos_lvl)]
+    lw_vals = np.asarray(t_lw.value)[np.asarray(pos_lw)]
+    np.testing.assert_array_equal(lw_vals, lvl_vals)
+    # Identical split multiset (feat, thr) over real splits.
+    real = ~np.asarray(
+        jnp.arange(t_lw.n_nodes) == t_lw.left)  # internal nodes
+    lw_splits = sorted(zip(np.asarray(t_lw.feat)[real].tolist(),
+                           np.asarray(t_lw.thr)[real].tolist()))
+    gain_lvl = np.asarray(t_lvl.gain)
+    real_lvl = gain_lvl > 0
+    lvl_splits = sorted(zip(np.asarray(t_lvl.feat)[real_lvl].tolist(),
+                            np.asarray(t_lvl.thr)[real_lvl].tolist()))
+    assert lw_splits == lvl_splits
+    np.testing.assert_allclose(np.sort(np.asarray(t_lw.gain)[real]),
+                               np.sort(gain_lvl[real_lvl]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["none", "top_outputs", "random_sampling",
+                                    "random_projection", "truncated_svd"])
+def test_leafwise_full_budget_fit_matches_levelwise(method):
+    """Satellite: end-to-end fits with max_leaves = 2^depth and no early
+    frontier exhaustion reproduce level-wise predictions exactly, for every
+    sketch method (fixed seed)."""
+    X, y = _plain_data(13)
+    kw = dict(loss="multiclass", n_trees=5, depth=4, learning_rate=0.3,
+              n_bins=32, sketch_method=method, sketch_k=2, use_kernel="jnp")
+    m_lvl = SketchBoost(GBDTConfig(**kw)).fit(X, y)
+    m_lw = SketchBoost(GBDTConfig(growth="leafwise", max_leaves=16,
+                                  **kw)).fit(X, y)
+    np.testing.assert_array_equal(np.asarray(m_lw.predict_raw(X)),
+                                  np.asarray(m_lvl.predict_raw(X)))
+
+
+def test_leafwise_beats_levelwise_at_equal_leaf_budget():
+    """Acceptance: strictly better train loss at an equal leaf budget —
+    16 leaves spent best-first under a depth-6 bound vs a full depth-4
+    level-wise tree."""
+    X, y = make_tabular("multiclass", 1200, 12, 6, seed=7)
+    kw = dict(loss="multiclass", n_trees=20, learning_rate=0.2,
+              use_kernel="jnp", seed=0)
+    m_lvl = SketchBoost(GBDTConfig(depth=4, **kw)).fit(X, y)
+    m_lw = SketchBoost(GBDTConfig(depth=6, growth="leafwise", max_leaves=16,
+                                  **kw)).fit(X, y)
+    loss_lvl = m_lvl.eval_loss(X, y)
+    loss_lw = m_lw.eval_loss(X, y)
+    assert loss_lw < loss_lvl, (loss_lw, loss_lvl)
+
+
+def test_leafwise_respects_depth_bound_and_budget():
+    X, y = make_tabular("multiclass", 500, 8, 4, seed=9)
+    cfg = GBDTConfig(loss="multiclass", n_trees=3, depth=3,
+                     growth="leafwise", max_leaves=7, learning_rate=0.3,
+                     use_kernel="jnp")
+    m = SketchBoost(cfg).fit(X, y)
+    pf = m.packed
+    nc = np.asarray(pf.node_count)
+    assert (nc <= 2 * 7 - 1).all()
+    assert pf.depth == 3
+    # Walk depth from pointers: no terminal deeper than the bound; leaf
+    # count within budget.
+    left = np.asarray(pf.left)
+    right = np.asarray(pf.right)
+    for t in range(pf.n_trees):
+        depth_of = np.zeros(pf.n_nodes, int)
+        for i in range(pf.n_nodes):
+            if left[t, i] != i:
+                depth_of[left[t, i]] = depth_of[i] + 1
+                depth_of[right[t, i]] = depth_of[i] + 1
+        term = left[t] == np.arange(pf.n_nodes)
+        used = np.arange(pf.n_nodes) < nc[t]
+        assert depth_of[used].max() <= 3
+        assert (term & used).sum() <= 7
+
+
+def test_leafwise_scan_matches_python_loop():
+    X, y = make_tabular("multiclass", 400, 8, 4, seed=11)
+    kw = dict(loss="multiclass", n_trees=6, depth=4, growth="leafwise",
+              max_leaves=9, learning_rate=0.3, scan_chunk=4,
+              use_kernel="jnp")
+    m_scan = SketchBoost(GBDTConfig(loop="scan", **kw)).fit(X, y)
+    m_py = SketchBoost(GBDTConfig(loop="python", **kw)).fit(X, y)
+    for a, b in zip(m_scan.forest, m_py.forest):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_leafwise_with_sampling_and_colsample():
+    """SGB weights + feature masks flow through the best-first grower."""
+    X, y = make_tabular("multiclass", 500, 10, 4, seed=13)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=5,
+                     growth="leafwise", max_leaves=12, subsample=0.7,
+                     colsample=0.6, learning_rate=0.3, use_kernel="jnp")
+    m = SketchBoost(cfg).fit(X, y)
+    assert np.isfinite(m.eval_loss(X, y))
+    phi, base = m.shap_values(X[:50], check_additivity=True)
+    assert np.isfinite(np.asarray(phi)).all()
+
+
+def test_leafwise_one_vs_all():
+    X, y = make_tabular("multiclass", 400, 8, 3, seed=15)
+    kw = dict(loss="multiclass", n_trees=3, depth=4, learning_rate=0.3,
+              use_kernel="jnp")
+    m_lvl = SketchBoost(GBDTConfig(strategy="one_vs_all", **kw)).fit(X, y)
+    m_lw = SketchBoost(GBDTConfig(strategy="one_vs_all", growth="leafwise",
+                                  max_leaves=16, **kw)).fit(X, y)
+    # Full budget: the vmapped best-first growers reproduce level-wise
+    # (float tolerance: the two vmapped programs compile differently, so
+    # exact bit equality is not the cross-program contract here).
+    np.testing.assert_allclose(np.asarray(m_lw.predict_raw(X)),
+                               np.asarray(m_lvl.predict_raw(X)),
+                               rtol=1e-5, atol=1e-6)
+    phi, base = m_lw.shap_values(X[:40], check_additivity=True)
+    assert phi.shape == (40, 8, 3)
+
+
+def test_leafwise_early_stopping_and_iteration_slice():
+    X, y = make_tabular("multiclass", 600, 8, 4, seed=17)
+    cfg = GBDTConfig(loss="multiclass", n_trees=30, depth=5,
+                     growth="leafwise", max_leaves=10, learning_rate=0.5,
+                     early_stopping_rounds=4, use_kernel="jnp")
+    m = SketchBoost(cfg).fit(X[:450], y[:450], eval_set=(X[450:], y[450:]))
+    staged = np.asarray(FO.predict_staged(m.packed, m._bin(X[:50])))
+    sliced = np.asarray(m.predict_raw(X[:50], iteration=2))
+    np.testing.assert_array_equal(staged[1], sliced)
+
+
+# ---------------------------------------------------------------------------
+# Sparse PackedForest: per-tree oracle bit parity + round trips
+# ---------------------------------------------------------------------------
+
+def _fit_leafwise(seed=21, **kw):
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=seed)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=4,
+                     growth="leafwise", max_leaves=6, learning_rate=0.3,
+                     use_kernel="jnp", **kw)
+    return SketchBoost(cfg).fit(X, y), X
+
+
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+def test_sparse_predict_bit_identical_to_per_tree_oracle(mode):
+    """Acceptance: the packed predict path (jnp ref AND interpret kernel)
+    is bit-identical to a per-tree pointer-walk oracle."""
+    m, X = _fit_leafwise()
+    codes = m._bin(X)
+    pf = m.packed
+    out = np.asarray(FO.predict_raw(pf, codes, mode=mode))
+    acc = jnp.broadcast_to(pf.base, (codes.shape[0], 4)).astype(jnp.float32)
+    for t in range(pf.n_trees):
+        acc = ref.forest_apply_ref(acc, codes, pf.feat[t:t + 1],
+                                   pf.thr[t:t + 1], pf.left[t:t + 1],
+                                   pf.right[t:t + 1], pf.leaf[t:t + 1],
+                                   pf.out_col[t:t + 1], pf.lr,
+                                   depth=pf.depth)
+        # Terminal routing cross-check against the standalone pointer walk.
+        pos = np.asarray(ref.node_walk_ref(pf.feat[t], pf.thr[t],
+                                           pf.left[t], pf.right[t], codes,
+                                           depth=pf.depth))
+        nc = int(np.asarray(pf.node_count)[t])
+        assert (np.asarray(pf.left)[t][pos] == pos).all() and (pos < nc).all()
+    np.testing.assert_array_equal(out, np.asarray(acc))
+
+
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+def test_sparse_shap_matches_per_tree_oracle(mode):
+    """Acceptance: packed SHAP on a sparse-topology forest bit-matches the
+    per-tree oracle dispatches in jnp mode; the interpret kernel matches to
+    float32 add-order noise (XLA compiles the T=1 and T=4 programs with
+    different FMA/fusion choices once depth > 3, so strict cross-program
+    bit equality is only defined within the depth-3 envelope — asserted by
+    `test_sparse_shap_interpret_bit_identical_depth3`).  Local accuracy is
+    exact either way."""
+    from repro import explain as EX
+    m, X = _fit_leafwise(seed=23)
+    codes = m._bin(X)[:64]
+    pf = m.packed
+    pack = EX.build_path_pack(pf)
+    phi, base = EX.shap_values(pf, codes, mode=mode)
+    per_tree = jnp.zeros((64, 6, 4), jnp.float32)
+    for t in range(pf.n_trees):
+        per_tree = ref.tree_shap_ref(
+            per_tree, codes, pack.slot_feat[t:t + 1],
+            pack.slot_lo[t:t + 1], pack.slot_hi[t:t + 1],
+            pack.slot_z[t:t + 1], pack.leaf[t:t + 1], pf.out_col[t:t + 1],
+            pf.lr, depth=pf.depth)
+    if mode == "jnp":
+        np.testing.assert_array_equal(np.asarray(phi),
+                                      np.asarray(per_tree))
+    else:
+        np.testing.assert_allclose(np.asarray(phi), np.asarray(per_tree),
+                                   rtol=1e-5, atol=2e-6)
+    raw = np.asarray(FO.predict_raw(pf, codes, mode="jnp"))
+    np.testing.assert_allclose(np.asarray(base)
+                               + np.asarray(phi).sum(axis=1), raw,
+                               atol=1e-4)
+
+
+def test_sparse_shap_interpret_bit_identical_depth3():
+    """Within the depth-3 / aligned-shape envelope the interpret kernel is
+    bit-identical to the jnp oracle on sparse leaf-wise topologies too."""
+    from repro import explain as EX
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=35)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                     growth="leafwise", max_leaves=6, learning_rate=0.3,
+                     use_kernel="jnp")
+    m = SketchBoost(cfg).fit(X, y)
+    codes = m._bin(X)
+    phi_j, base_j = EX.shap_values(m.packed, codes, mode="jnp")
+    phi_k, base_k = EX.shap_values(m.packed, codes, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(phi_k), np.asarray(phi_j))
+    np.testing.assert_array_equal(np.asarray(base_k), np.asarray(base_j))
+
+
+def test_sparse_pack_unpack_roundtrip():
+    """Satellite: sparse pack/unpack round trip is bit-exact, both
+    strategies."""
+    for strategy in ("single_tree", "one_vs_all"):
+        X, y = make_tabular("multiclass", 250, 5, 3, seed=25)
+        cfg = GBDTConfig(loss="multiclass", strategy=strategy, n_trees=3,
+                         depth=4, growth="leafwise", max_leaves=5,
+                         learning_rate=0.3, use_kernel="jnp")
+        m = SketchBoost(cfg).fit(X, y)
+        forest2, strat2 = FO.unpack_forest(m.packed)
+        assert strat2 == strategy
+        assert isinstance(forest2, T.NodeTree)
+        for a, b in zip(forest2, m.forest):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # Re-pack closes the loop.
+        pf2 = FO.pack_forest(forest2, m.base_score, cfg.learning_rate,
+                             strategy=strategy, max_depth=m.packed.depth)
+        for a, b in zip(pf2, m.packed):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slice_rounds_on_sparse_forest():
+    m, X = _fit_leafwise(seed=27)
+    codes = m._bin(X)
+    staged = np.asarray(FO.predict_staged(m.packed, codes))
+    for r in (1, 3):
+        sliced = np.asarray(FO.predict_raw(FO.slice_rounds(m.packed, r),
+                                           codes))
+        np.testing.assert_array_equal(staged[r - 1], sliced)
+
+
+def test_is_heap_not_fooled_by_coinciding_tree():
+    """A creation-order leaf-wise tree CAN coincide with the heap pointer
+    pattern (BFS-order expansion, power-of-two budget); is_heap must check
+    every tree so unpack never mis-decodes the others."""
+    N, d = 7, 2
+    ids = np.arange(N, dtype=np.int32)
+    # Tree 0: BFS creation order == exact heap pattern.
+    l0 = np.array([1, 3, 5, 3, 4, 5, 6], np.int32)
+    r0 = np.array([2, 4, 6, 3, 4, 5, 6], np.int32)
+    # Tree 1: right-child-first expansion — NOT heap-shaped.
+    l1 = np.array([1, 1, 3, 3, 4, 5, 6], np.int32)
+    r1 = np.array([2, 2, 4, 3, 4, 5, 6], np.int32)
+    l1[1], r1[1] = 1, 1                  # node 1 is a leaf
+    l1[2], r1[2] = 3, 4                  # node 2 splits
+    rng = np.random.default_rng(0)
+    value = rng.normal(size=(2, N, d)).astype(np.float32)
+    value[0, :3] = 0.0                   # internal nodes carry no payload
+    value[1, 0] = 0.0
+    value[1, 2] = 0.0
+    nodes = T.NodeTree(
+        feat=jnp.asarray(np.stack([np.where(l0 != ids, 1, 0),
+                                   np.where(l1 != ids, 1, 0)])),
+        thr=jnp.asarray(rng.integers(0, 4, (2, N)).astype(np.int32)),
+        left=jnp.asarray(np.stack([l0, l1])),
+        right=jnp.asarray(np.stack([r0, r1])),
+        value=jnp.asarray(value),
+        gain=jnp.ones((2, N), jnp.float32),
+        cover=jnp.ones((2, N), jnp.float32),
+        node_count=jnp.asarray([7, 5], jnp.int32))
+    pf = FO.pack_forest(nodes, jnp.zeros((d,)), 0.5, max_depth=3)
+    assert not pf.is_heap
+    forest2, _ = FO.unpack_forest(pf)
+    assert isinstance(forest2, T.NodeTree)
+    codes = jnp.asarray(rng.integers(0, 8, (50, 3)), jnp.uint8)
+    pf2 = FO.pack_forest(forest2, jnp.zeros((d,)), 0.5, max_depth=3)
+    np.testing.assert_array_equal(np.asarray(FO.predict_raw(pf2, codes)),
+                                  np.asarray(FO.predict_raw(pf, codes)))
+
+
+def test_path_pack_excludes_inert_padding_terminals():
+    """Inert node slots (>= node_count) self-loop but must not inflate the
+    SHAP path axis: L tracks the real leaf count, 8-aligned."""
+    from repro.explain.paths import _terminal_slots
+    N = 63                                    # max_leaves=32 worth of slots
+    ids = np.arange(N)
+    left = np.tile(ids, (2, 1))
+    left[0, 0] = 1                            # tree 0: 1 split, 2 leaves
+    left[1, 0] = 1
+    node_count = np.array([3, 3])
+    slots, valid = _terminal_slots(left, node_count)
+    assert slots.shape[1] == 8                # not 62 (the padding slots)
+    assert valid.sum(axis=1).tolist() == [2, 2]
+    assert set(slots[0][valid[0]].tolist()) == {1, 2}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints: v3 round trip for sparse forests, v2 -> v3 upgrade
+# ---------------------------------------------------------------------------
+
+def test_sparse_checkpoint_roundtrip(tmp_path):
+    from repro.io.checkpoint import (load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    m, X = _fit_leafwise(seed=29)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    pf, q, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["format_version"] == 3 and meta["depth"] == m.packed.depth
+    for a, b in zip(pf, m.packed):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    codes = m._bin(X)
+    np.testing.assert_array_equal(
+        np.asarray(FO.predict_raw(pf, codes, mode="jnp")),
+        np.asarray(FO.predict_raw(m.packed, codes, mode="jnp")))
+
+
+def test_v2_heap_checkpoint_upgrades_to_pointer(tmp_path):
+    """Satellite: a format_version-2 implicit-heap checkpoint loads through
+    the heap->pointer converter — predictions AND explanations bit-match
+    the in-memory canonicalized model."""
+    from test_explain import save_legacy_heap_checkpoint
+    from repro.io.checkpoint import load_forest_checkpoint
+    from repro import explain as EX
+    X, y = make_tabular("multiclass", 300, 6, 4, seed=31)
+    cfg = GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                     learning_rate=0.3, use_kernel="jnp")
+    m = SketchBoost(cfg).fit(X, y)
+    save_legacy_heap_checkpoint(str(tmp_path), m, version=2,
+                                metadata={"loss": "multiclass"})
+    pf, q, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["format_version"] == 2
+    assert pf.is_heap and pf.depth == 3
+    for a, b in zip(pf, m.packed):
+        if a is None or b is None:
+            assert a is b
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    codes = m._bin(X)
+    np.testing.assert_array_equal(
+        np.asarray(FO.predict_raw(pf, codes, mode="jnp")),
+        np.asarray(m.predict_raw(X)))
+    a, _ = EX.shap_values(pf, codes[:40], mode="jnp")
+    b, _ = EX.shap_values(m.packed, codes[:40], mode="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sparse_forest_serves(tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X = _fit_leafwise(seed=33)
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path))
+    outs = server.serve([X[:5], X[5:12]])
+    expect = np.asarray(m.predict(X[:12]))
+    np.testing.assert_array_equal(np.concatenate(outs, axis=0), expect)
+    phi, base = server.explain(X[:7])
+    e_phi, e_base = m.shap_values(X[:7])
+    np.testing.assert_array_equal(phi, np.asarray(e_phi))
+
+
+# ---------------------------------------------------------------------------
+# Config validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_silently_ignored_combinations():
+    ok = GBDTConfig(growth="leafwise", max_leaves=8, depth=3)
+    ok.validate()
+    with pytest.raises(ValueError, match="max_leaves"):
+        GBDTConfig(growth="levelwise", max_leaves=8).validate()
+    with pytest.raises(ValueError, match="max_leaves >= 2"):
+        GBDTConfig(growth="leafwise").validate()
+    with pytest.raises(ValueError, match="exceeds 2\\^depth"):
+        GBDTConfig(growth="leafwise", max_leaves=64, depth=3).validate()
+    with pytest.raises(ValueError, match="unknown growth"):
+        GBDTConfig(growth="depthwise").validate()
+    with pytest.raises(ValueError, match="no leaf-wise implementation"):
+        GBDTConfig(growth="leafwise", max_leaves=8, depth=3,
+                   hist_engine="direct").validate()
+    with pytest.raises(ValueError, match="unknown hist_dtype"):
+        GBDTConfig(hist_dtype="float16").validate()
+    with pytest.raises(ValueError, match="bfloat16"):
+        GBDTConfig(hist_dtype="bfloat16", use_kernel="jnp").validate()
+    # validate() runs inside fit's resolve(): bad configs fail fast.
+    X, y = make_tabular("multiclass", 60, 4, 3, seed=1)
+    with pytest.raises(ValueError, match="max_leaves"):
+        SketchBoost(GBDTConfig(loss="multiclass", n_trees=1,
+                               max_leaves=4)).fit(X, y)
+    # bfloat16 is accepted under kernel modes.
+    GBDTConfig(hist_dtype="bfloat16", use_kernel="interpret").validate()
