@@ -370,6 +370,108 @@ def bench_gbdt(scale) -> List[Dict]:
     return rows
 
 
+def bench_gbdt_dist(scale) -> List[Dict]:
+    """Device-count scaling of the distributed grower (emulated hosts).
+
+    Matrix: devices in {1, 2, 4, 8} (8 splits 4x2 over (data, model), the
+    rest shard rows only) x sketch_k in {2, 5, full} x histogram-collective
+    compression {off, on}.  Each cell records warm per-round wall-clock and
+    the analytic collective payload (`distributed.round_collective_bytes`).
+    Run via ``python -m benchmarks.run gbdt --dist`` — the ``--dist`` flag
+    forces ``--xla_force_host_platform_device_count=8`` before jax loads.
+
+    Inline acceptance guard: the compressed collective must move at most
+    ``(k + 1) / (d + 1)`` of the uncompressed payload — the paper's
+    communication claim restated for the histogram psum.
+
+    Results are merged into ``BENCH_gbdt.json`` under ``dist_rows``,
+    preserving any single-host ``rows`` already there.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distributed as GD
+    from repro.core import quantize as Q
+    from repro.core.boosting import GBDTConfig
+    from repro.core.losses import get_loss
+    from repro.data.pipeline import make_tabular
+
+    sc = (GBDT_FULL if scale is FULL else
+          GBDT_SMOKE if scale is SMOKE else GBDT_QUICK)
+    trees = min(sc["trees"], 16)            # the axis of interest is devices
+    d = sc["d"]
+    X, y = make_tabular("multiclass", sc["n"], sc["m"], d, seed=0)
+    q = Q.fit_quantizer(X, sc["bins"])
+    codes = Q.apply_quantizer(q, jnp.asarray(X))
+    Y = jnp.asarray(y)
+
+    n_dev = jax.device_count()
+    rows: List[Dict] = []
+    for dev in (1, 2, 4, 8):
+        if dev > n_dev or sc["n"] % dev:
+            print(f"  gbdt-dist skip devices={dev} "
+                  f"(have {n_dev}, n={sc['n']})", flush=True)
+            continue
+        from repro.launch.mesh import device_subset_mesh
+        mp = 2 if dev == 8 else 1           # 8 devices: exercise (4, 2)
+        shape = (dev // mp, mp)
+        mesh = device_subset_mesh(dev, mp)
+        for k_label, method, k in ((2, "random_projection", 2),
+                                   (5, "random_projection", 5),
+                                   ("full", "none", 0)):
+            for comp in ("none", "sketch"):
+                cfg = GBDTConfig(
+                    loss="multiclass", n_outputs=d, sketch_method=method,
+                    sketch_k=k, n_trees=trees, depth=sc["depth"],
+                    n_bins=sc["bins"], learning_rate=0.1, seed=0,
+                    use_kernel=False, dist_hist_compression=comp,
+                    dist_hist_k=0 if (comp == "none" or 0 < k < d)
+                    else max(d - 2, 1))
+                F, _, _ = GD.fit_distributed(cfg, mesh, codes, Y)  # cold
+                t0 = time.perf_counter()
+                F, _, _ = GD.fit_distributed(cfg, mesh, codes, Y)  # warm
+                jax.block_until_ready(F)
+                dt = time.perf_counter() - t0
+                col = GD.round_collective_bytes(cfg, sc["m"], d)
+                if comp == "sketch":
+                    k_eff = cfg.dist_hist_k_effective
+                    budget = (k_eff + 1) / (d + 1) * col["full_bytes"]
+                    assert col["moved_bytes"] <= budget * (1 + 1e-6), (
+                        "compressed collective exceeds the (k+1)/(d+1) "
+                        "byte budget", cfg, col)
+                rows.append({
+                    "devices": dev, "mesh": "x".join(map(str, shape)),
+                    "sketch_k": k_label, "dist_hist_compression": comp,
+                    "dist_hist_k": cfg.dist_hist_k_effective
+                    if comp == "sketch" else 0,
+                    "rounds": trees,
+                    "fit_time_s": round(dt, 3),
+                    "round_time_s": round(dt / trees, 5),
+                    "rounds_per_sec": round(trees / dt, 3),
+                    "train_loss": round(
+                        float(get_loss("multiclass").value(F, Y)), 5),
+                    "collective": col,
+                })
+                print(f"  gbdt-dist devices={dev} k={k_label} comp={comp}: "
+                      f"{rows[-1]['rounds_per_sec']} rounds/s "
+                      f"moved={col['moved_bytes']}B", flush=True)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_gbdt.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.setdefault("bench", "gbdt_compiled_loop")
+    payload["dist_backend"] = jax.default_backend()
+    payload["dist_scale"] = dict(sc, trees=trees)
+    payload["dist_unix_time"] = int(time.time())
+    payload["dist_rows"] = rows
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:gbdt-dist] wrote {path}", flush=True)
+    return rows
+
+
 PRED_QUICK = dict(n=4000, m=20, d=6, trees=40, depth=5, bins=64, n_pred=20000)
 PRED_FULL = dict(n=40000, m=60, d=16, trees=200, depth=6, bins=256,
                  n_pred=100000)
@@ -678,7 +780,15 @@ def main() -> None:
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-speed tiny shapes (predict/gbdt smokes)")
+    ap.add_argument("--dist", action="store_true",
+                    help="add the distributed device-count matrix to the "
+                         "gbdt bench (emulates 8 CPU hosts; jax is imported "
+                         "lazily so the flag can still take effect)")
     args = ap.parse_args()
+    if args.dist:
+        # Must land before the first jax import (all benches import lazily).
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     scale = FULL if args.full else SMOKE if args.smoke else QUICK
     names = args.benches or list(BENCHES)
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -687,6 +797,8 @@ def main() -> None:
         print(f"=== bench {name}", flush=True)
         t0 = time.perf_counter()
         rows = BENCHES[name](scale)
+        if name == "gbdt" and args.dist:
+            rows = rows + bench_gbdt_dist(scale)
         dt = time.perf_counter() - t0
         path = os.path.join(RESULTS_DIR, f"bench_{name}.json")
         with open(path, "w") as f:

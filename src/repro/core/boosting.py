@@ -80,12 +80,26 @@ class GBDTConfig:
     loop: str = "scan"                   # "scan" (compiled rounds) | "python"
     scan_chunk: int = 32                 # rounds per scan segment (host boundary)
     predict_row_chunk: int = 65536       # rows per predict dispatch (0 = all)
+    dist_hist_compression: str = "none"  # distributed-only: route the
+                                         # histogram psum through the JL
+                                         # sketch ("sketch") or keep it
+                                         # exact ("none")
+    dist_hist_k: int = 0                 # JL width of the sketched
+                                         # collective; 0 = reuse sketch_k
     seed: int = 0
 
-    def validate(self) -> None:
+    @property
+    def dist_hist_k_effective(self) -> int:
+        """JL width the sketched histogram collective actually uses."""
+        return self.dist_hist_k if self.dist_hist_k > 0 else self.sketch_k
+
+    def validate(self, *, distributed: bool = False) -> None:
         """Reject option combinations that would otherwise be silently
         ignored (the failure mode this guards: a user sets ``max_leaves``
-        and the level-wise grower quietly never reads it)."""
+        and the level-wise grower quietly never reads it).  The distributed
+        factories (`core.distributed`) call this with ``distributed=True``
+        — the single shared place config-level legality lives for both
+        paths."""
         if self.growth not in ("levelwise", "leafwise"):
             raise ValueError(f"unknown growth {self.growth!r}; "
                              "expected 'levelwise' or 'leafwise'")
@@ -123,6 +137,27 @@ class GBDTConfig:
                 "kernel; the jnp path would silently ignore it — request a "
                 "kernel mode (use_kernel=True on TPU, 'interpret' for "
                 "debugging) or keep hist_dtype='float32'")
+        if self.dist_hist_compression not in ("none", "sketch"):
+            raise ValueError(
+                f"unknown dist_hist_compression "
+                f"{self.dist_hist_compression!r}; expected 'none' (exact "
+                "psum) or 'sketch' (JL-compressed collective)")
+        if self.dist_hist_k < 0:
+            raise ValueError(
+                f"dist_hist_k must be >= 0, got {self.dist_hist_k}")
+        if not distributed and self.dist_hist_compression != "none":
+            raise ValueError(
+                "dist_hist_compression='sketch' compresses the multi-device "
+                "histogram collective; the single-device path has no "
+                "collective and would silently ignore it — train through "
+                "core.distributed (make_distributed_boost_step / "
+                "fit_distributed) or keep 'none'")
+        if (distributed and self.dist_hist_compression == "sketch"
+                and self.dist_hist_k_effective < 1):
+            raise ValueError(
+                "dist_hist_compression='sketch' needs a JL width for the "
+                "collective: set dist_hist_k >= 1 (or leave it 0 with "
+                "sketch_k >= 1)")
 
     def resolve(self, d: int) -> "GBDTConfig":
         """Validate option combinations, bind the output dimension, and pin

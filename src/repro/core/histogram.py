@@ -218,36 +218,28 @@ def interleave_children(side: jax.Array, built4: jax.Array,
     return jnp.stack([left, right], axis=1).reshape((2 * P,) + built4.shape[1:])
 
 
-@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "subtract"))
-def build_level_jnp(codes: jax.Array, stats: jax.Array, state: LevelState,
-                    prev_hist: Optional[jax.Array], *, n_nodes: int,
-                    n_bins: int, subtract: bool) -> jax.Array:
-    """jnp reference path of the partitioned level engine.
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_build"))
+def build_level_built(codes: jax.Array, stats: jax.Array, state: LevelState,
+                      side: jax.Array, *, n_nodes: int, n_bins: int,
+                      n_build: int) -> jax.Array:
+    """Compacted built-children accumulation: ``(n_nodes/2, m, n_bins, c)``.
 
-    Builds the ``(n_nodes, m, n_bins, c)`` histograms of one level from the
-    partition state.  With ``subtract=True`` (level > 0) only the smaller
-    child of each parent is accumulated — over a fixed-size ``n // 2`` row
-    buffer gathered from the contiguous child segments — and the sibling is
-    derived from ``prev_hist`` (the previous level's histograms).
+    The subtraction engine's direct-build half, factored out so the
+    distributed grower can reuse it with a *globally* chosen ``side``:
+    ``side[p]`` selects which child of parent ``p`` is accumulated.  On one
+    device it comes from `smaller_children(state.counts)`; under sharding it
+    must come from the psummed global counts — the locally-built child can
+    then hold MORE than ``n // 2`` local rows (a shard may own mostly
+    rows of the globally-smaller side), which is why ``n_build`` is a
+    parameter: a too-small buffer would silently drop rows (``mode="drop"``
+    below), corrupting histograms with no shape error.  Padding slots carry
+    zero stats appended after all real rows, so the per-cell summation
+    order — and therefore the fp32 bits — is identical for any
+    ``n_build`` that bounds the built row count.
     """
     n, m = codes.shape
     B = n_bins
-    if not subtract:
-        # Partitioned build of every node: segment-sum over rows in
-        # partition order (node-major segment ids).
-        ri = state.order
-        seg_base = state.node_perm * B
-
-        def per_feature(col):
-            return jax.ops.segment_sum(stats[ri], seg_base + col[ri],
-                                       num_segments=n_nodes * B)
-
-        hist = jax.vmap(per_feature, in_axes=1)(codes.astype(jnp.int32))
-        return hist.reshape(m, n_nodes, B, -1).transpose(1, 0, 2, 3)
-
     P = n_nodes // 2
-    side, _ = smaller_children(state.counts)
-    n_build = max(n // 2, 1)                    # sum of smaller halves <= n/2
     # Compact the built-children rows into the fixed buffer: rows of node c
     # are contiguous in partition order, so a mask + exclusive cumsum gives
     # each built row its destination slot.
@@ -266,7 +258,40 @@ def build_level_jnp(codes: jax.Array, stats: jax.Array, state: LevelState,
                                    num_segments=P * B)
 
     built = jax.vmap(per_feature, in_axes=1)(codes.astype(jnp.int32))
-    built4 = built.reshape(m, P, B, -1).transpose(1, 0, 2, 3)  # (P, m, B, c)
+    return built.reshape(m, P, B, -1).transpose(1, 0, 2, 3)   # (P, m, B, c)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "subtract"))
+def build_level_jnp(codes: jax.Array, stats: jax.Array, state: LevelState,
+                    prev_hist: Optional[jax.Array], *, n_nodes: int,
+                    n_bins: int, subtract: bool) -> jax.Array:
+    """jnp reference path of the partitioned level engine.
+
+    Builds the ``(n_nodes, m, n_bins, c)`` histograms of one level from the
+    partition state.  With ``subtract=True`` (level > 0) only the smaller
+    child of each parent is accumulated — over a fixed-size ``n // 2`` row
+    buffer gathered from the contiguous child segments (`build_level_built`)
+    — and the sibling is derived from ``prev_hist`` (the previous level's
+    histograms).
+    """
+    n, m = codes.shape
+    B = n_bins
+    if not subtract:
+        # Partitioned build of every node: segment-sum over rows in
+        # partition order (node-major segment ids).
+        ri = state.order
+        seg_base = state.node_perm * B
+
+        def per_feature(col):
+            return jax.ops.segment_sum(stats[ri], seg_base + col[ri],
+                                       num_segments=n_nodes * B)
+
+        hist = jax.vmap(per_feature, in_axes=1)(codes.astype(jnp.int32))
+        return hist.reshape(m, n_nodes, B, -1).transpose(1, 0, 2, 3)
+
+    side, _ = smaller_children(state.counts)
+    built4 = build_level_built(codes, stats, state, side, n_nodes=n_nodes,
+                               n_bins=n_bins, n_build=max(n // 2, 1))
     sib4 = prev_hist - built4
     return interleave_children(side, built4, sib4)
 

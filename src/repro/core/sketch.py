@@ -188,9 +188,19 @@ def sketch_sharded(G_local: jax.Array, *, method: str, k: int,
     elif method == "random_projection":
         Pi = random_projection_matrix(d_global, k, key)
     elif method == "truncated_svd":
-        raise NotImplementedError(
-            "truncated_svd is a single-device appendix baseline (O(d^3)); use "
-            "random_projection for distributed runs")
+        # The appendix baseline, distributed: gather the (small) output axis,
+        # psum the d x d Gram over the row axes, and eigh it replicated on
+        # every shard — O(d^2 n_loc + d^3) per shard, same asymptotics the
+        # appendix flags for the single-device baseline.  Gain scores are
+        # invariant to the column signs eigh leaves unspecified, so the
+        # split search is well-defined even where eigenvectors are sign-
+        # ambiguous across runs.
+        G_full = jax.lax.all_gather(Gf, model_axis, axis=1, tiled=True)
+        gram = G_full.T @ G_full                            # (d, d) local part
+        for ax in data_axes:
+            gram = jax.lax.psum(gram, ax)
+        _, vecs = jnp.linalg.eigh(gram)
+        Pi = vecs[:, -k:]
     else:
         raise ValueError(f"unknown sketch method {method!r}")
     Pi_local = jax.lax.dynamic_slice_in_dim(Pi, shard_index * d_loc, d_loc, axis=0)

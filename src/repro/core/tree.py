@@ -152,13 +152,18 @@ def grow_tree(codes: jax.Array, stats: jax.Array, G: jax.Array, H_diag: jax.Arra
 @functools.partial(
     jax.jit,
     static_argnames=("depth", "max_leaves", "n_bins", "use_kernel",
-                     "hist_dtype"))
+                     "hist_dtype", "psum_axes", "dist_hist_compression",
+                     "dist_hist_k"))
 def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
                        H_diag: jax.Array, *, depth: int, max_leaves: int,
                        n_bins: int, lam: float,
                        min_data_in_leaf: float = 1.0, min_gain: float = 0.0,
                        feature_mask: Optional[jax.Array] = None,
-                       use_kernel=False, hist_dtype: str = "float32"):
+                       use_kernel=False, hist_dtype: str = "float32",
+                       psum_axes: tuple = (),
+                       dist_hist_compression: str = "none",
+                       dist_hist_k: int = 0,
+                       collective_key: Optional[jax.Array] = None):
     """Grow one multivariate tree leaf-wise (LightGBM-style best-first).
 
     Instead of expanding every node of a level, each step expands the single
@@ -186,6 +191,19 @@ def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
     Returns ``(NodeTree, leaf_pos)`` where ``leaf_pos`` is the (n,) terminal
     node id of each sample.
 
+    Distributed growth (called from inside shard_map by
+    `core.distributed.make_distributed_boost_step`): with ``psum_axes``
+    non-empty every per-node histogram, row count, and leaf sum is psummed
+    over those row axes right after its shard-local build, so every shard
+    sees identical (global) split decisions while rows stay sharded.  The
+    built-child gather then uses a FULL ``n``-row local buffer — the
+    *globally* smaller child can hold more than ``n // 2`` of one shard's
+    local rows, and the ``n // 2`` buffer would silently drop the overflow.
+    ``dist_hist_compression="sketch"`` routes the histogram psum's gradient
+    channels through the JL machinery of `distributed.compression` (count
+    channel always exact; ``collective_key`` must then be the same on every
+    shard so the projection replicates for free).
+
     Numerics: for a given set of expanded nodes the built/derived histogram
     chain is the same one the level-wise ``subtract`` engine produces (same
     smaller-child choice, same partition-ordered summation), so with
@@ -196,22 +214,48 @@ def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
     n, m = codes.shape
     c = stats.shape[1]
     mode = H.resolve_kernel_mode(use_kernel)
-    n_buf = max(n // 2, 1)                 # smaller child is never bigger
+    sharded = bool(psum_axes)
+    if dist_hist_compression == "sketch" and collective_key is None:
+        raise ValueError("dist_hist_compression='sketch' needs a "
+                         "collective_key (replicated across shards)")
+    # Locally-smaller is not globally-smaller: under sharding the built
+    # child may own up to ALL of a shard's local rows.
+    n_buf = n if sharded else max(n // 2, 1)
     N = 2 * max_leaves - 1
     lam_ = jnp.float32(lam)
     min_data_ = jnp.float32(min_data_in_leaf)
     min_gain_ = jnp.float32(min_gain)
     neg_inf = jnp.float32(-jnp.inf)
 
-    def build_hist(rows, valid):
+    def _psum(x):
+        for ax in psum_axes:
+            x = jax.lax.psum(x, ax)
+        return x
+
+    def reduce_hist(h, key):
+        """All-reduce one (m, B, c) node histogram over the row axes."""
+        if not sharded:
+            return h
+        if dist_hist_compression == "sketch":
+            from repro.distributed import compression as C
+            g, cnt = h[..., :-1], h[..., -1:]
+            sk, Pi, shape = C.compress_block(g.reshape(-1, c - 1), key,
+                                             dist_hist_k)
+            g = C.decompress_block(_psum(sk), Pi, shape).reshape(g.shape)
+            return jnp.concatenate([g, _psum(cnt)], axis=-1)
+        return _psum(h)
+
+    def build_hist(rows, valid, key=None):
         codes_g = codes[rows].astype(jnp.int32)
         stats_g = stats[rows].astype(jnp.float32) * valid[:, None]
         if mode != "jnp":
             from repro.kernels import ops as kops
-            return kops.node_histogram(codes_g, stats_g, n_bins=n_bins,
-                                       hist_dtype=hist_dtype,
-                                       interpret=mode == "interpret")
-        return H.node_hist_jnp(codes_g, stats_g, n_bins=n_bins)
+            h = kops.node_histogram(codes_g, stats_g, n_bins=n_bins,
+                                    hist_dtype=hist_dtype,
+                                    interpret=mode == "interpret")
+        else:
+            h = H.node_hist_jnp(codes_g, stats_g, n_bins=n_bins)
+        return reduce_hist(h, key)
 
     def score(hists, k: int) -> S.Splits:
         """Best splits of ``k`` stacked (m, B, c) histograms."""
@@ -227,8 +271,10 @@ def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
         return S.best_splits(gains, min_gain_)
 
     ids = jnp.arange(N, dtype=jnp.int32)
+    root_key = (jax.random.fold_in(collective_key, 0)
+                if dist_hist_compression == "sketch" else None)
     root_hist = build_hist(jnp.arange(n, dtype=jnp.int32),
-                           jnp.ones((n,), jnp.float32))
+                           jnp.ones((n,), jnp.float32), root_key)
     sp0 = score(root_hist[None], 1)
     root_gain = jnp.where(sp0.is_leaf[0] | (depth < 1) | (max_leaves < 2),
                           neg_inf, sp0.gain[0])
@@ -273,10 +319,15 @@ def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
 
         # Build the smaller child directly; derive the sibling from the
         # parent's cached histogram (sibling subtraction, ties -> left).
-        built_left = part.counts[c1] <= part.counts[c2]
+        # Under sharding the choice uses GLOBAL counts so every shard
+        # builds (and derives) the same child even where local counts
+        # disagree with the global ordering.
+        built_left = _psum(part.counts[c1]) <= _psum(part.counts[c2])
         rows, valid = H.gather_node_rows(
             part, jnp.where(built_left, c1, c2), n_buf)
-        built = build_hist(rows, valid.astype(jnp.float32))
+        exp_key = (jax.random.fold_in(collective_key, t + 1)
+                   if dist_hist_compression == "sketch" else None)
+        built = build_hist(rows, valid.astype(jnp.float32), exp_key)
         s_p = s["slot_of"][p]
         sib = s["cache"][s_p] - built
         hist_l = jnp.where(built_left, built, sib)
@@ -319,15 +370,16 @@ def grow_tree_leafwise(codes: jax.Array, stats: jax.Array, G: jax.Array,
     sample_w = stats[:, -1:]
     g_sum, h_sum = H.leaf_sums(leaf_pos, G * sample_w, H_diag * sample_w,
                                n_leaves=N)
+    g_sum, h_sum = _psum(g_sum), _psum(h_sum)      # exact: never sketched
     is_term = left == ids
     value = jnp.where(is_term[:, None], -g_sum / (h_sum + lam_), 0.0)
 
     # Node covers bottom-up: children have larger ids, so one reverse sweep
     # makes every internal cover the exact sum of its children (the
     # invariant TreeSHAP's zero-fractions rely on).
-    cover_leaf = jax.ops.segment_sum(sample_w[:, 0],
-                                     leaf_pos.astype(jnp.int32),
-                                     num_segments=N)
+    cover_leaf = _psum(jax.ops.segment_sum(sample_w[:, 0],
+                                           leaf_pos.astype(jnp.int32),
+                                           num_segments=N))
 
     def up(i, cov):
         j = N - 1 - i

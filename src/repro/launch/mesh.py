@@ -27,6 +27,30 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
+def device_subset_mesh(n_devices: int, model_parallel: int = 1,
+                       axes: Tuple[str, str] = ("data", "model")):
+    """(data, model) mesh over the FIRST ``n_devices`` devices.
+
+    Unlike `make_mesh` (which wants the full device count), this builds a
+    mesh over any prefix of the process's devices — the device-count
+    scaling axis of the distributed GBDT bench and the emulated-host parity
+    suite both sweep it.
+    """
+    import numpy as np
+    devs = jax.devices()[:n_devices]
+    if len(devs) < n_devices:
+        raise ValueError(f"need {n_devices} devices, have {len(devs)}; "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         f"count={n_devices} (before jax is imported) to "
+                         "emulate them on CPU")
+    if n_devices % model_parallel:
+        raise ValueError(f"n_devices={n_devices} not divisible by "
+                         f"model_parallel={model_parallel}")
+    arr = np.asarray(devs).reshape(n_devices // model_parallel,
+                                   model_parallel)
+    return jax.sharding.Mesh(arr, axes)
+
+
 def host_device_mesh(model_parallel: int = 1, pods: int = 1):
     """Best-effort mesh over whatever devices exist (CPU smoke runs)."""
     n = len(jax.devices())

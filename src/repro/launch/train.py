@@ -98,6 +98,8 @@ def train_lm(args) -> Dict[str, Any]:
 
 def train_gbdt(args) -> Dict[str, Any]:
     from repro.core.boosting import GBDTConfig, SketchBoost
+    if args.dist:
+        return train_gbdt_dist(args)
     X, y = data.make_tabular("multiclass", args.rows, args.features,
                              args.outputs, seed=args.seed)
     Xtr, Xte, ytr, yte = data.train_test_split(X, y, seed=args.seed)
@@ -114,6 +116,62 @@ def train_gbdt(args) -> Dict[str, Any]:
     print(f"[gbdt] {args.sketch} k={args.sketch_k}: loss={loss:.4f} "
           f"acc={acc:.4f} time={dt:.1f}s")
     return {"loss": loss, "acc": acc, "time_s": dt}
+
+
+def train_gbdt_dist(args) -> Dict[str, Any]:
+    """GBDT through `core.distributed` on a (data, model) device mesh.
+
+    Shards rows over the data axis and outputs over the model axis; trees
+    are bit-compatible with the single-device fit (see
+    tests/test_distributed_parity.py).  On CPU, emulate hosts by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE launching
+    (this module imports jax at load time, so the env var cannot be set
+    here).  ``--compress`` routes the histogram collective through the JL
+    sketch (`--compress-rank` is the channel width).
+    """
+    import numpy as np
+    from repro.core import distributed as GD
+    from repro.core import forest as FO
+    from repro.core import quantize as Q
+    from repro.core.boosting import GBDTConfig
+    from repro.launch.mesh import device_subset_mesh
+
+    X, y = data.make_tabular("multiclass", args.rows, args.features,
+                             args.outputs, seed=args.seed)
+    Xtr, Xte, ytr, yte = data.train_test_split(X, y, seed=args.seed)
+    n_dev = len(jax.devices())
+    mp = args.model_parallel
+    dp = max(n_dev // mp, 1)
+    # fit_distributed shards rows over the data axis: trim the ragged tail.
+    n_tr = (len(ytr) // dp) * dp
+    Xtr, ytr = Xtr[:n_tr], ytr[:n_tr]
+    mesh = device_subset_mesh(dp * mp, mp)
+    cfg = GBDTConfig(
+        loss="multiclass", n_outputs=args.outputs, n_trees=args.trees,
+        depth=6, sketch_method=args.sketch, sketch_k=args.sketch_k,
+        learning_rate=args.lr if args.lr != 3e-4 else 0.1, seed=args.seed,
+        use_kernel=False,
+        dist_hist_compression="sketch" if args.compress else "none",
+        dist_hist_k=args.compress_rank if args.compress else 0)
+    q = Q.fit_quantizer(Xtr, cfg.n_bins)
+    codes_tr = Q.apply_quantizer(q, jnp.asarray(Xtr))
+    t0 = time.perf_counter()
+    F, forest, history = GD.fit_distributed(cfg, mesh, codes_tr,
+                                            jnp.asarray(ytr), eval_every=10)
+    jax.block_until_ready(F)
+    dt = time.perf_counter() - t0
+    pf = FO.pack_forest(forest, jnp.zeros((args.outputs,), jnp.float32),
+                        cfg.learning_rate, max_depth=cfg.depth)
+    codes_te = Q.apply_quantizer(q, jnp.asarray(Xte))
+    scores = np.asarray(FO.predict_raw(pf, codes_te))
+    acc = float((scores.argmax(1) == yte).mean())
+    bytes_model = GD.round_collective_bytes(cfg, args.features, args.outputs)
+    print(f"[gbdt-dist] mesh={dp}x{mp} {args.sketch} k={args.sketch_k} "
+          f"compress={cfg.dist_hist_compression}: acc={acc:.4f} "
+          f"time={dt:.1f}s moved={bytes_model['moved_bytes']}B/round")
+    return {"acc": acc, "time_s": dt, "mesh": f"{dp}x{mp}",
+            "collective": bytes_model,
+            "history": history}
 
 
 def main():
@@ -149,6 +207,13 @@ def main():
                     choices=["none", "top_outputs", "random_sampling",
                              "random_projection", "truncated_svd"])
     ap.add_argument("--sketch-k", type=int, default=5)
+    ap.add_argument("--dist", action="store_true",
+                    help="train the GBDT through core.distributed on a "
+                         "(data, model) mesh; --model-parallel sets the "
+                         "model axis, --compress/--compress-rank the "
+                         "histogram-collective compression.  To emulate "
+                         "hosts on CPU, export XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=8 before launching")
     args = ap.parse_args()
 
     res = (train_gbdt(args) if args.arch == "sketchboost-gbdt"

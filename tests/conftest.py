@@ -1,5 +1,13 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device (the
-dry-run owns the 512-device placeholder world; see launch/dryrun.py).
+"""Shared fixtures.
+
+Device emulation: the distributed parity suite (test_distributed_parity.py,
+test_distributed_props.py) needs a multi-device world, so we force 8 emulated
+CPU devices *before* jax initialises.  The hook is guarded twice: an explicit
+``XLA_FLAGS`` from the user/CI always wins, and if jax is somehow already
+imported we leave the flag alone (it would be ignored anyway).  Single-device
+tests are unaffected — meshes built with ``make_mesh((1, 1))`` take a device
+subset — and the dry-run keeps its own 512-device placeholder world
+(launch/dryrun.py runs in a subprocess).
 
 If `hypothesis` is not installed (it is a dev-extra, see requirements-dev.txt),
 install the deterministic fallback shim from `_hypothesis_fallback.py` so the
@@ -8,6 +16,9 @@ property-based seed tests still collect and run everywhere.
 import importlib.util
 import os
 import sys
+
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np
 import pytest
