@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import forest as FO
+from repro.core import guards as GU
 from repro.core import histogram as H
 from repro.core import losses as L
 from repro.core import quantize as Q
@@ -86,6 +87,19 @@ class GBDTConfig:
                                          # exact ("none")
     dist_hist_k: int = 0                 # JL width of the sketched
                                          # collective; 0 = reuse sketch_k
+    guard_policy: str = "off"            # non-finite guards (core.guards):
+                                         # "off" | "raise" | "skip_round" |
+                                         # "clip"
+    guard_clip: float = 1e6              # clamp magnitude under "clip"
+    hessian_floor: float = 0.0           # per-sample hessian floor (applies
+                                         # under every guard policy when > 0)
+    save_every: int = 0                  # checkpoint every k round
+                                         # boundaries (0 = off; needs
+                                         # ckpt_dir)
+    ckpt_dir: str = ""                   # checkpoint root for save_every
+    ckpt_keep: int = 3                   # round checkpoints retained
+    resume_from: str = ""                # checkpoint root to resume fit()
+                                         # from ("" = fresh fit)
     seed: int = 0
 
     @property
@@ -158,6 +172,28 @@ class GBDTConfig:
                 "dist_hist_compression='sketch' needs a JL width for the "
                 "collective: set dist_hist_k >= 1 (or leave it 0 with "
                 "sketch_k >= 1)")
+        if self.guard_policy not in GU.GUARD_POLICIES:
+            raise ValueError(
+                f"unknown guard_policy {self.guard_policy!r}; expected one "
+                f"of {GU.GUARD_POLICIES} (see core.guards)")
+        if self.guard_clip <= 0.0:
+            raise ValueError(
+                f"guard_clip must be > 0 (the clamp magnitude for the "
+                f"'clip' policy), got {self.guard_clip}")
+        if self.hessian_floor < 0.0:
+            raise ValueError(
+                f"hessian_floor must be >= 0, got {self.hessian_floor}")
+        if self.save_every < 0:
+            raise ValueError(f"save_every must be >= 0, got {self.save_every}")
+        if self.save_every > 0 and not self.ckpt_dir:
+            raise ValueError(
+                f"save_every={self.save_every} checkpoints every "
+                f"{self.save_every} rounds but ckpt_dir is empty — there is "
+                "nowhere to write; set ckpt_dir or save_every=0")
+        if self.ckpt_keep < 1:
+            raise ValueError(
+                f"ckpt_keep must be >= 1 (at least the newest checkpoint "
+                f"survives pruning), got {self.ckpt_keep}")
 
     def resolve(self, d: int) -> "GBDTConfig":
         """Validate option combinations, bind the output dimension, and pin
@@ -169,6 +205,153 @@ class GBDTConfig:
             self, n_outputs=d,
             use_kernel=H.resolve_kernel_mode(self.use_kernel),
             hist_engine=H.resolve_hist_engine(self.hist_engine))
+
+    def strip_io(self) -> "GBDTConfig":
+        """Drop host-side checkpoint knobs before the config enters a jit
+        static argument: two fits differing only in where/how often they
+        checkpoint must share compiled executables (the loops read
+        ``save_every`` from the un-stripped config on the host side)."""
+        return dataclasses.replace(self, save_every=0, ckpt_dir="",
+                                   ckpt_keep=3, resume_from="")
+
+
+# -- input validation (actionable errors instead of jit-internal failures) ---
+
+#: The schedule-critical hyperparameters a resumed fit must share with the
+#: run that wrote the checkpoint — anything here changes gradients, sketches,
+#: tree shapes, or the RNG schedule, so a mismatch breaks bit-identity.
+RESUME_CFG_KEYS = (
+    "loss", "strategy", "sketch_method", "sketch_k", "growth", "max_leaves",
+    "depth", "n_bins", "learning_rate", "lambda_l2", "min_data_in_leaf",
+    "min_gain", "subsample", "goss_a", "goss_b", "colsample", "hist_dtype",
+    "guard_policy", "guard_clip", "hessian_floor", "seed")
+
+
+def _resume_cfg_snapshot(cfg: GBDTConfig) -> Dict[str, Any]:
+    return {k: getattr(cfg, k) for k in RESUME_CFG_KEYS}
+
+
+def validate_features(X, *, n_features: Optional[int] = None,
+                      where: str = "X") -> np.ndarray:
+    """Check a feature matrix before it reaches the quantizer / jitted
+    kernels, raising `ValueError` that names the offending axis instead of
+    failing deep inside a trace.  NaN is legal (it is the missing-value
+    encoding, see `quantize.MISSING_BIN`); ``+/-inf`` is not — it would
+    silently land in the extreme bins.  Returns the array as float32."""
+    X = np.asarray(X)
+    if X.dtype.kind not in "fiub":
+        raise ValueError(
+            f"{where} has non-numeric dtype {X.dtype}; features must be "
+            "numeric (encode categoricals first; NaN encodes missing)")
+    if X.ndim != 2:
+        raise ValueError(
+            f"{where} must be 2-D (rows, features); got {X.ndim}-D shape "
+            f"{tuple(X.shape)}")
+    if n_features is not None and X.shape[1] != n_features:
+        raise ValueError(
+            f"{where} has {X.shape[1]} features on axis 1 but the model was "
+            f"fit with {n_features}; the column layout must match training")
+    X = np.ascontiguousarray(X, dtype=np.float32)
+    inf_mask = np.isinf(X)
+    if inf_mask.any():
+        cols = np.flatnonzero(inf_mask.any(axis=0))
+        raise ValueError(
+            f"{where} contains {int(inf_mask.sum())} +/-inf values in "
+            f"feature column(s) {cols[:8].tolist()} (axis 1); only NaN "
+            "encodes missing — replace or drop the infinities")
+    return X
+
+
+def validate_targets(y, *, loss: str, n_rows: Optional[int] = None,
+                     where: str = "y") -> np.ndarray:
+    """Check targets: numeric, row-aligned with X, finite, and (for 1-D
+    multiclass labels) non-negative integers."""
+    y = np.asarray(y)
+    if y.dtype.kind not in "fiub":
+        raise ValueError(
+            f"{where} has non-numeric dtype {y.dtype}; targets must be "
+            "numeric")
+    if y.ndim not in (1, 2):
+        raise ValueError(
+            f"{where} must be 1-D (class ids) or 2-D (rows, outputs); got "
+            f"{y.ndim}-D shape {tuple(y.shape)}")
+    if n_rows is not None and y.shape[0] != n_rows:
+        raise ValueError(
+            f"{where} has {y.shape[0]} rows on axis 0 but X has {n_rows}; "
+            "features and targets must be row-aligned")
+    if y.dtype.kind == "f":
+        bad = ~np.isfinite(y)
+        if bad.any():
+            first = tuple(int(i) for i in np.argwhere(bad)[0])
+            raise ValueError(
+                f"{where} contains {int(bad.sum())} non-finite values "
+                f"(first at index {first}); targets must be finite — clean "
+                "them, or pass check_input=False with a guard_policy to "
+                "exercise the non-finite guards deliberately")
+    if loss == "multiclass" and y.ndim == 1:
+        if y.dtype.kind == "f" and not np.all(y == np.floor(y)):
+            raise ValueError(
+                f"{where} holds 1-D multiclass labels but has non-integer "
+                "values; pass integer class ids (or one-hot rows)")
+        if y.size and int(y.min()) < 0:
+            raise ValueError(
+                f"{where} has negative class ids (min {int(y.min())}); "
+                "multiclass labels must be in [0, n_classes)")
+    return y
+
+
+def _check_resume_compat(cfg: GBDTConfig, state) -> None:
+    """Refuse to resume under a config that breaks bit-identity."""
+    saved = dict(state.meta.get("train", {}).get("cfg", {}))
+    want = _resume_cfg_snapshot(cfg)
+    diffs = [f"{k}: checkpoint={saved[k]!r} != fit={want[k]!r}"
+             for k in RESUME_CFG_KEYS if k in saved and saved[k] != want[k]]
+    if diffs:
+        raise ValueError(
+            "resume_from checkpoint was written under a different config — "
+            "the resumed rounds would not reproduce the uninterrupted run:"
+            "\n  " + "\n  ".join(diffs))
+    if state.round > cfg.n_trees:
+        raise ValueError(
+            f"resume_from checkpoint already holds {state.round} completed "
+            f"rounds but cfg.n_trees={cfg.n_trees}; raise n_trees past the "
+            "checkpoint to continue training")
+
+
+# -- fault-injection hooks (duck-typed; see runtime.chaos) -------------------
+
+def _as_chaos_list(chaos) -> Tuple[Any, ...]:
+    if chaos is None:
+        return ()
+    if isinstance(chaos, (list, tuple)):
+        return tuple(chaos)
+    return (chaos,)
+
+
+def _chaos_check(chaos, round_idx: int) -> None:
+    """Fire kill-style injections whose trigger round has arrived."""
+    for c in chaos:
+        check = getattr(c, "check_round", None)
+        if check is not None:
+            check(round_idx)
+
+
+def _chaos_mutate(chaos, Y, round_idx: int):
+    """Apply data-corruption injections (e.g. NaN-at-row) due at or before
+    ``round_idx``.  Corruption is persistent from its trigger round on."""
+    for c in chaos:
+        mutate = getattr(c, "mutate_targets", None)
+        if mutate is not None:
+            Y = mutate(Y, round_idx)
+    return Y
+
+
+def _next_chaos_round(chaos, done: int) -> Optional[int]:
+    """Earliest chaos trigger strictly after ``done`` (scan segments are
+    capped there so injections land on exact round boundaries)."""
+    rounds = [int(c.round) for c in chaos
+              if getattr(c, "round", None) is not None and int(c.round) > done]
+    return min(rounds) if rounds else None
 
 
 def _sample_weights(key: jax.Array, G: jax.Array, cfg: GBDTConfig) -> jax.Array:
@@ -206,6 +389,8 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
     """
     loss = L.get_loss(cfg.loss)
     G, Hd = loss.grad_hess(F, Y)
+    G, Hd, bad = GU.guard_grad_hess(G, Hd, cfg.guard_policy, cfg.guard_clip,
+                                    cfg.hessian_floor)
     k_key, s_key, c_key = jax.random.split(key, 3)
     w = _sample_weights(s_key, G, cfg)
     fmask = _feature_mask(c_key, codes.shape[1], cfg)
@@ -228,7 +413,15 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
         Gk = SK.build_sketch(G * w, method=cfg.sketch_method, k=cfg.sketch_k,
                              key=k_key)
         stats = jnp.concatenate([Gk, w], axis=1)
+        # Re-check after the sketch: a projection can overflow on its own
+        # (inf * finite, eigh on a degenerate Gram) even from finite G.
+        stats, bad = GU.guard_stats(stats, cfg.guard_policy, cfg.guard_clip,
+                                    bad)
         tree, leaf_pos = grow(stats, G, Hd)
+        if cfg.guard_policy == "skip_round":
+            scale = GU.skip_scale(bad, cfg.guard_policy)
+            tree = tree._replace(value=tree.value * scale,
+                                 gain=tree.gain * scale)
         F = F + cfg.learning_rate * tree.value[leaf_pos]
         return F, tree
 
@@ -240,12 +433,26 @@ def _boost_round(F: jax.Array, codes: jax.Array, Y: jax.Array, key: jax.Array,
         return grow(stats, g_j[:, None], h_j[:, None])
 
     trees, poss = jax.vmap(grow_one, in_axes=(1, 1))(G, Hd)  # (d, ...) axes
+    if cfg.guard_policy == "skip_round":
+        # one_vs_all stats are plain (sanitized-)gradient sums — no sketch
+        # projection to re-check — so the grad/hess flag alone gates the
+        # round; zero every output's tree at once.
+        scale = GU.skip_scale(bad, cfg.guard_policy)
+        trees = trees._replace(value=trees.value * scale,
+                               gain=trees.gain * scale)
     delta = jax.vmap(lambda v, pos: v[pos, 0])(trees.value, poss)  # (d, n)
     F = F + cfg.learning_rate * delta.T
     # Fold the per-output axis into a tree whose value tensor is (d, L, 1);
     # `forest.pack_forest` later flattens the (T, d, ...) buffers into width-1
     # packed trees with per-tree output columns.
     return F, trees
+
+
+def _concat_chunks(chunks):
+    """Concatenate per-segment stacked tree pytrees along the round axis."""
+    return (chunks[0] if len(chunks) == 1
+            else jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *chunks))
 
 
 def _as_forest(stacked):
@@ -352,7 +559,14 @@ class SketchBoost:
         self._path_pack: Any = None     # full-forest PathPack, built lazily
 
     # -- data prep ----------------------------------------------------------
-    def _bin(self, X) -> jax.Array:
+    def _bin(self, X, check_input: bool = True, where: str = "X") -> jax.Array:
+        if self.quantizer is None:
+            raise ValueError(
+                "model is not fitted (no quantizer); call fit() first or "
+                "resume from a checkpoint")
+        if check_input:
+            X = validate_features(X, n_features=self.quantizer.edges.shape[0],
+                                  where=where)
         return Q.apply_quantizer(self.quantizer, jnp.asarray(X, jnp.float32))
 
     def _targets(self, y, d: int) -> jax.Array:
@@ -383,34 +597,124 @@ class SketchBoost:
 
     # -- training -----------------------------------------------------------
     def fit(self, X, y, eval_set: Optional[Tuple] = None,
-            verbose: bool = False) -> "SketchBoost":
+            verbose: bool = False, *, check_input: bool = True,
+            chaos=None) -> "SketchBoost":
+        """Train the ensemble.
+
+        ``check_input`` routes X/y (and the eval set) through
+        `validate_features` / `validate_targets` for actionable errors;
+        disable it only to deliberately feed corrupt data to the non-finite
+        guards.  ``chaos`` takes `runtime.chaos` injections (or a list) for
+        deterministic fault testing.  With ``cfg.save_every > 0`` the fit
+        checkpoints every ``save_every`` round boundaries into
+        ``cfg.ckpt_dir``; ``cfg.resume_from`` restores such a checkpoint and
+        continues the run bit-identically (same data, same config).
+        """
+        if check_input:
+            X = validate_features(X, where="X")
+            y = validate_targets(y, loss=self.cfg.loss, n_rows=X.shape[0])
+        else:
+            X = np.asarray(X, np.float32)
         d = self._infer_d(y)
         cfg = self.cfg.resolve(d)
-        X = np.asarray(X, np.float32)
-        self.quantizer = Q.fit_quantizer(X, cfg.n_bins, seed=cfg.seed)
-        codes = self._bin(X)
+        chaos = _as_chaos_list(chaos)
+
+        state = None
+        if cfg.resume_from:
+            from repro.io import checkpoint as CK
+            state = CK.load_boost_checkpoint(cfg.resume_from)
+            _check_resume_compat(cfg, state)
+            if state.quantizer is None:
+                raise ValueError(
+                    f"checkpoint under {cfg.resume_from!r} carries no "
+                    "quantizer; resume needs the binning saved at fit time "
+                    "(cfg.save_every checkpoints store it automatically)")
+            # Reuse the SAVED binning and base score: refitting them on the
+            # (identical) data is redundant, and any drift would silently
+            # break bit-identity.
+            self.quantizer = state.quantizer
+            self.base_score = jnp.asarray(state.packed.base, jnp.float32)
+        else:
+            self.quantizer = Q.fit_quantizer(X, cfg.n_bins, seed=cfg.seed)
+        codes = self._bin(X, check_input=False)
         Y = self._targets(y, d)
-        self.base_score = self._base(Y, d).astype(jnp.float32)
+        if state is None:
+            self.base_score = self._base(Y, d).astype(jnp.float32)
 
         n = codes.shape[0]
-        F = jnp.broadcast_to(self.base_score, (n, d)).astype(jnp.float32)
+        if state is not None:
+            if tuple(state.F.shape) != (n, d):
+                raise ValueError(
+                    f"resume_from checkpoint holds training scores of shape "
+                    f"{tuple(state.F.shape)} but X/y give ({n}, {d}); "
+                    "resume must rerun fit() on the same training data")
+            F = jnp.asarray(state.F, jnp.float32)
+        else:
+            F = jnp.broadcast_to(self.base_score, (n, d)).astype(jnp.float32)
         has_eval = eval_set is not None
         if has_eval:
-            codes_v = self._bin(np.asarray(eval_set[0], np.float32))
-            Yv = self._targets(eval_set[1], d)
-            Fv = jnp.broadcast_to(self.base_score,
-                                  (codes_v.shape[0], d)).astype(jnp.float32)
+            Xv = (validate_features(eval_set[0],
+                                    n_features=self.quantizer.edges.shape[0],
+                                    where="eval_set X")
+                  if check_input else np.asarray(eval_set[0], np.float32))
+            codes_v = self._bin(Xv, check_input=False)
+            yv = (validate_targets(eval_set[1], loss=cfg.loss,
+                                   n_rows=codes_v.shape[0], where="eval_set y")
+                  if check_input else eval_set[1])
+            Yv = self._targets(yv, d)
+            if state is not None:
+                if state.Fv is None:
+                    raise ValueError(
+                        "resume_from checkpoint was saved without an eval "
+                        "set but fit() got one; the early-stopping "
+                        "trajectory cannot be reconstructed — drop eval_set "
+                        "or refit from scratch")
+                if tuple(state.Fv.shape) != (codes_v.shape[0], d):
+                    raise ValueError(
+                        f"resume_from checkpoint holds eval scores of shape "
+                        f"{tuple(state.Fv.shape)} but eval_set gives "
+                        f"({codes_v.shape[0]}, {d}); resume must use the "
+                        "same eval set")
+                Fv = jnp.asarray(state.Fv, jnp.float32)
+            else:
+                Fv = jnp.broadcast_to(
+                    self.base_score, (codes_v.shape[0], d)).astype(jnp.float32)
         else:
+            if state is not None and state.Fv is not None:
+                raise ValueError(
+                    "resume_from checkpoint carries eval scores but fit() "
+                    "got no eval_set; pass the same eval_set so early "
+                    "stopping replays bit-identically")
             # Static-branch dummies: never touched when has_eval is False.
             codes_v, Yv, Fv = codes[:1], Y[:1], F[:1]
 
-        key = jax.random.key(cfg.seed)
+        if state is not None:
+            key = state.key
+            start, prefix = state.round, state.trees
+            if isinstance(prefix, T.Forest):
+                # The loops stack per-round `tree.Tree` pytrees; re-wrap the
+                # stored Forest so prefix and new segments share a pytree
+                # structure (same field names, same arrays).
+                prefix = T.Tree(**prefix._asdict())
+            best = (state.best_loss, state.best_round)
+            self.history = list(state.history)
+        else:
+            key = jax.random.key(cfg.seed)
+            start, prefix, best = 0, None, (np.inf, -1)
+            self.history = []
+
+        saver = self._make_saver(cfg, has_eval)
+        run_cfg = cfg.strip_io()     # ckpt knobs stay out of jit cache keys
         if cfg.loop == "python":
-            self._fit_python(cfg, F, codes, Y, Fv, codes_v, Yv, has_eval, key,
-                             verbose)
+            self._fit_python(run_cfg, F, codes, Y, Fv, codes_v, Yv, has_eval,
+                             key, verbose, start=start, prefix=prefix,
+                             best=best, chaos=chaos, saver=saver,
+                             save_every=cfg.save_every)
         elif cfg.loop == "scan":
-            self._fit_scan(cfg, F, codes, Y, Fv, codes_v, Yv, has_eval, key,
-                           verbose)
+            self._fit_scan(run_cfg, F, codes, Y, Fv, codes_v, Yv, has_eval,
+                           key, verbose, start=start, prefix=prefix,
+                           best=best, chaos=chaos, saver=saver,
+                           save_every=cfg.save_every)
         else:
             raise ValueError(f"unknown loop {cfg.loop!r}; "
                              "expected 'scan' or 'python'")
@@ -422,24 +726,67 @@ class SketchBoost:
         self._path_pack = None              # path slots belong to old forest
         return self
 
+    def _make_saver(self, cfg: GBDTConfig, has_eval: bool):
+        """Round-boundary checkpoint closure for the training loops (None
+        when checkpointing is off).  Every save is a format-v4 step: the
+        packed serving prefix plus the raw resume state."""
+        if not (cfg.save_every > 0 and cfg.ckpt_dir):
+            return None
+        from repro.io import checkpoint as CK
+
+        def save(round_done, stacked, F, Fv, key, best_loss, best_round,
+                 history):
+            forest = _as_forest(stacked)
+            packed = FO.pack_forest(
+                forest, self.base_score, cfg.learning_rate,
+                strategy=cfg.strategy,
+                max_depth=cfg.depth if cfg.growth == "leafwise" else None)
+            meta = _resume_cfg_snapshot(cfg)
+            meta["extra_meta"] = {
+                "best_iteration": int(best_round) + 1 if best_round >= 0
+                else int(round_done)}
+            CK.save_boost_checkpoint(
+                cfg.ckpt_dir, round_done=int(round_done), packed=packed,
+                quantizer=self.quantizer, trees=forest, F=F,
+                Fv=(Fv if has_eval else None), key=key, history=history,
+                best_loss=float(best_loss), best_round=int(best_round),
+                cfg_meta=meta, keep_n=cfg.ckpt_keep)
+
+        return save
+
     def _fit_scan(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
-                  has_eval: bool, key, verbose: bool) -> None:
+                  has_eval: bool, key, verbose: bool, *, start: int = 0,
+                  prefix=None, best=(np.inf, -1), chaos=(), saver=None,
+                  save_every: int = 0) -> None:
         """Compiled loop: scan segments of `scan_chunk` rounds, host-side
-        early-stopping replay between segments (see module docstring)."""
+        early-stopping replay between segments (see module docstring).
+        Segments are additionally capped at checkpoint (``save_every``) and
+        chaos-trigger boundaries so saves and injections land on exact round
+        boundaries; ``start``/``prefix``/``best`` seed a resumed run."""
         n_total = cfg.n_trees
         chunk = cfg.scan_chunk if cfg.scan_chunk > 0 else n_total
-        chunk = max(1, min(chunk, n_total))
-        best_loss, best_round = np.inf, -1
-        chunks = []                 # per-segment stacked tree pytrees
-        done, stop = 0, False
+        chunk = max(1, min(chunk, max(n_total - start, 1)))
+        best_loss, best_round = best
+        chunks = ([] if prefix is None else [prefix])
+        done, stop = start, False
         t0 = time.perf_counter()
         seg_start = 0.0
         while done < n_total and not stop:
+            _chaos_check(chaos, done)
+            Y = _chaos_mutate(chaos, Y, done)
             steps = min(chunk, n_total - done)
+            if save_every > 0:
+                boundary = (done // save_every + 1) * save_every
+                steps = min(steps, boundary - done)
+            nxt = _next_chaos_round(chaos, done)
+            if nxt is not None:
+                steps = min(steps, nxt - done)
             F, Fv, key, trees, vloss = boost_scan(
                 F, codes, Y, Fv, codes_v, Yv, key, cfg=cfg, n_steps=steps,
                 has_eval=has_eval)
             vl = np.asarray(vloss)            # host sync = segment boundary
+            if cfg.guard_policy == "raise":
+                GU.check_scores_host(F, done + steps - 1)
             elapsed = time.perf_counter() - t0
             keep = steps
             for j in range(steps):
@@ -465,14 +812,16 @@ class SketchBoost:
             chunks.append(jax.tree.map(lambda x: x[:keep], trees))
             done += keep
             seg_start = elapsed
+            if (saver is not None and not stop and done % save_every == 0):
+                saver(done, _concat_chunks(chunks), F, Fv, key,
+                      best_loss, best_round, list(self.history))
             if verbose and not stop:
                 msg = f"[sketchboost] round {done - 1}"
                 if has_eval:
                     msg += f" valid_loss={float(vl[keep - 1]):.5f}"
                 print(msg)
 
-        stacked = (chunks[0] if len(chunks) == 1 else jax.tree.map(
-            lambda *xs: jnp.concatenate(xs, axis=0), *chunks))
+        stacked = _concat_chunks(chunks)
         if best_round >= 0 and cfg.early_stopping_rounds:
             keep_n = best_round + 1
             stacked = jax.tree.map(lambda x: x[:keep_n], stacked)
@@ -481,14 +830,32 @@ class SketchBoost:
         self.forest = _as_forest(stacked)
 
     def _fit_python(self, cfg: GBDTConfig, F, codes, Y, Fv, codes_v, Yv,
-                    has_eval: bool, key, verbose: bool) -> None:
+                    has_eval: bool, key, verbose: bool, *, start: int = 0,
+                    prefix=None, best=(np.inf, -1), chaos=(), saver=None,
+                    save_every: int = 0) -> None:
         """Reference loop: one `boost_step` dispatch per round.  Kept for
         scan-parity tests and debugging; trains bit-identical forests."""
         loss = L.get_loss(cfg.loss)
-        trees, best_loss, best_round, t0 = [], jnp.inf, -1, time.perf_counter()
-        for it in range(cfg.n_trees):
+        trees, (best_loss, best_round) = [], best
+        t0 = time.perf_counter()
+
+        def combined(new_trees):
+            """Checkpoint prefix + new rounds -> one stacked pytree."""
+            stacked = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_trees)
+                       if new_trees else None)
+            if prefix is None:
+                return stacked
+            if stacked is None:
+                return prefix
+            return _concat_chunks([prefix, stacked])
+
+        for it in range(start, cfg.n_trees):
+            _chaos_check(chaos, it)
+            Y = _chaos_mutate(chaos, Y, it)
             key, sub = jax.random.split(key)
             F, tree = boost_step(F, codes, Y, sub, cfg)
+            if cfg.guard_policy == "raise":
+                GU.check_scores_host(F, it)
             trees.append(tree)
             rec = {"round": it, "train_time_s": time.perf_counter() - t0}
             if has_eval:
@@ -506,17 +873,21 @@ class SketchBoost:
                               f"(best {best_loss:.5f} @ {best_round})")
                     break
             self.history.append(rec)
+            if saver is not None and (it + 1) % save_every == 0:
+                saver(it + 1, combined(trees), F, Fv, key, best_loss,
+                      best_round, list(self.history))
             if verbose and it % 20 == 0:
                 msg = f"[sketchboost] round {it}"
                 if "valid_loss" in rec:
                     msg += f" valid_loss={rec['valid_loss']:.5f}"
                 print(msg)
 
+        stacked = combined(trees)
         if best_round >= 0 and cfg.early_stopping_rounds:
-            trees = trees[:best_round + 1]
-        self.best_round = best_round if best_round >= 0 else len(trees) - 1
-        self.forest = _as_forest(jax.tree.map(lambda *xs: jnp.stack(xs),
-                                              *trees))
+            stacked = jax.tree.map(lambda x: x[:best_round + 1], stacked)
+        self.best_round = (best_round if best_round >= 0
+                           else stacked.feat.shape[0] - 1)
+        self.forest = _as_forest(stacked)
 
     # -- inference ----------------------------------------------------------
     @property

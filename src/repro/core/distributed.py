@@ -56,11 +56,14 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import forest as FO
+from repro.core import guards as GU
 from repro.core import histogram as H
 from repro.core import sketch as SK
 from repro.core import split as S
 from repro.core import tree as T
-from repro.core.boosting import GBDTConfig, _as_forest
+from repro.core.boosting import (GBDTConfig, _as_forest, _concat_chunks,
+                                 _check_resume_compat, _resume_cfg_snapshot)
 from repro.distributed import compression as C
 
 
@@ -363,11 +366,24 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
             dist_hist_compression=comp, dist_hist_k=k_comp,
             collective_key=comp_key)
 
+    def all_bad(flag):
+        """Shard-local non-finite flag -> mesh-global (every shard must take
+        the same skip decision or the forests desync)."""
+        if flag is None:
+            return None
+        b = flag.astype(jnp.float32)
+        for ax in raxes:
+            b = jax.lax.pmax(b, ax)
+        return jax.lax.pmax(b, model_axis) > 0
+
     def local_step(F_l, codes_l, Y_l, key):
         n_loc, d_loc = F_l.shape
         m = codes_l.shape[1]
         d_global = d_loc * tp
         G, Hd = sharded_grad_hess(cfg.loss, F_l, Y_l, model_axis, d_loc)
+        G, Hd, bad = GU.guard_grad_hess(G, Hd, cfg.guard_policy,
+                                        cfg.guard_clip, cfg.hessian_floor)
+        bad = all_bad(bad)
 
         # Same derivation as boosting._boost_round: k_key drives the sketch;
         # s_key / c_key are burned (SGB/GOSS + colsample are single-device-
@@ -395,16 +411,30 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
                                    k=cfg.sketch_k, key=k_key,
                                    d_global=d_global, model_axis=model_axis,
                                    data_axes=raxes)
-            stats = maybe_bf16(jnp.concatenate(
-                [Gk, jnp.ones((n_loc, 1), jnp.float32)], axis=1))
+            stats = jnp.concatenate(
+                [Gk, jnp.ones((n_loc, 1), jnp.float32)], axis=1)
+            # Re-check post-sketch (a projection can overflow on its own),
+            # then round: same placement as boosting._boost_round.
+            stats, bad = GU.guard_stats(stats, cfg.guard_policy,
+                                        cfg.guard_clip, bad)
+            bad = all_bad(bad) if cfg.guard_policy in ("skip_round", "clip") \
+                else bad
+            stats = maybe_bf16(stats)
+            skip = (GU.skip_scale(bad, cfg.guard_policy)
+                    if cfg.guard_policy == "skip_round" else None)
             if cfg.growth == "leafwise":
                 tree, leaf_pos = grow_leafwise(codes_l, stats, G, Hd,
                                                comp_key)
+                if skip is not None:
+                    tree = tree._replace(value=tree.value * skip,
+                                         gain=tree.gain * skip)
                 F_new = F_l + cfg.learning_rate * tree.value[leaf_pos]
                 return F_new, tree
             heap_feat, heap_thr, heap_gain, node_pos = grow_levelwise(
                 codes_l, codes_h, stats, f_off, comp_key)
             value, cover = leaf_pass(node_pos, G, Hd, 2 ** depth)
+            if skip is not None:
+                value, heap_gain = value * skip, heap_gain * skip
             F_new = F_l + cfg.learning_rate * value[node_pos]
             tree = T.Tree(feat=heap_feat, thr=heap_thr, value=value,
                           gain=heap_gain, cover=cover)
@@ -431,6 +461,14 @@ def make_distributed_boost_step(mesh: Mesh, cfg: GBDTConfig, *,
             return tree, value[node_pos, 0]
 
         trees, deltas = jax.vmap(grow_one, in_axes=(1, 1))(G, Hd)
+        if cfg.guard_policy == "skip_round":
+            # one_vs_all stats are plain sanitized-gradient channels (no
+            # sketch projection), so the grad/hess flag alone gates the
+            # round — mirror boosting._boost_round.
+            scale = GU.skip_scale(bad, cfg.guard_policy)
+            trees = trees._replace(value=trees.value * scale,
+                                   gain=trees.gain * scale)
+            deltas = deltas * scale
         F_new = F_l + cfg.learning_rate * deltas.T
         return F_new, trees
 
@@ -486,7 +524,9 @@ def fit_distributed(cfg: GBDTConfig, mesh: Mesh, codes: jax.Array,
                     feature_shard: bool = False,
                     base_score: Optional[jax.Array] = None,
                     n_rounds: Optional[int] = None,
-                    eval_every: int = 0):
+                    eval_every: int = 0,
+                    chaos: Any = None,
+                    watchdog: Any = None):
     """Multi-device training driver: ``cfg.n_trees`` distributed rounds.
 
     ``codes`` is the (n, m) pre-binned feature matrix (see `core.quantize`)
@@ -497,6 +537,18 @@ def fit_distributed(cfg: GBDTConfig, mesh: Mesh, codes: jax.Array,
     split(key)`` per round), so a fixed seed reproduces the single-device
     forest — the property the parity suite pins down.
 
+    The round loop itself is a `runtime.fault.RestartableLoop`: with
+    ``cfg.save_every > 0`` it writes format-v4 boost checkpoints (the same
+    `io.checkpoint.save_boost_checkpoint` steps `SketchBoost.fit` writes, so
+    every step doubles as a serving checkpoint) into ``cfg.ckpt_dir``, and
+    ``cfg.resume_from`` restores one and continues — *including onto a
+    different mesh* than wrote it: checkpoints are mesh-agnostic host
+    arrays, laid out on THIS mesh via `elastic.remesh` (the elastic-restart
+    path after a host loss).  ``chaos`` takes `runtime.chaos` injections
+    (kill / drop-host / NaN-at-row / delay-shard); ``watchdog`` an optional
+    `fault.StragglerWatchdog` to observe per-round times (DelayShard's
+    virtual seconds included).
+
     Returns ``(F, forest, history)``: the final raw scores (n, d), the
     stacked training-side forest (`tree.Forest` level-wise /
     `tree.NodeTree` leaf-wise, one leading round axis — same layout
@@ -504,6 +556,10 @@ def fit_distributed(cfg: GBDTConfig, mesh: Mesh, codes: jax.Array,
     list of ``{"round", "train_loss"}`` records (every ``eval_every``
     rounds; empty when 0).
     """
+    from repro.runtime import chaos as CH
+    from repro.runtime import elastic as E
+    from repro.runtime import fault as FT
+
     if cfg.n_outputs < 1:
         raise ValueError(
             "fit_distributed needs cfg.n_outputs set explicitly (the "
@@ -511,28 +567,89 @@ def fit_distributed(cfg: GBDTConfig, mesh: Mesh, codes: jax.Array,
             "e.g. dataclasses.replace(cfg, n_outputs=d)")
     d = cfg.n_outputs
     n = codes.shape[0]
-    step = make_distributed_boost_step(mesh, cfg, row_axes=row_axes,
+    run_cfg = cfg.strip_io()        # ckpt knobs stay out of jit cache keys
+    step = make_distributed_boost_step(mesh, run_cfg, row_axes=row_axes,
                                        model_axis=model_axis,
                                        feature_shard=feature_shard)
-    evaluate = (make_distributed_eval(mesh, cfg, row_axes=row_axes,
+    evaluate = (make_distributed_eval(mesh, run_cfg, row_axes=row_axes,
                                       model_axis=model_axis)
                 if eval_every else None)
     base = (jnp.zeros((d,), jnp.float32) if base_score is None
             else jnp.asarray(base_score, jnp.float32))
-    F = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
-    Y = jnp.asarray(Y)
-    key = jax.random.key(cfg.seed)
+    F0 = jnp.broadcast_to(base, (n, d)).astype(jnp.float32)
     rounds = int(n_rounds) if n_rounds else cfg.n_trees
-    trees: List[Any] = []
+    f_sharding = NamedSharding(mesh, P(row_axes, model_axis))
+    chaos = CH.as_chaos_list(chaos)
     history: List[Dict[str, Any]] = []
-    for it in range(rounds):
-        key, sub = jax.random.split(key)
-        F, tree = step(F, codes, Y, sub)
-        trees.append(tree)
+    # Chaos may poison Y mid-run (persistently); box it so step_fn's closure
+    # carries the mutation forward.
+    Y_box = [jnp.asarray(Y)]
+
+    save_fn = None
+    if cfg.save_every > 0 and cfg.ckpt_dir:
+        from repro.io import checkpoint as CK
+
+        def save_fn(step_idx, state):
+            forest = _as_forest(_concat_chunks(state["trees"]))
+            packed = FO.pack_forest(
+                forest, base, cfg.learning_rate, strategy=cfg.strategy,
+                max_depth=cfg.depth if cfg.growth == "leafwise" else None)
+            CK.save_boost_checkpoint(
+                cfg.ckpt_dir, round_done=step_idx + 1, packed=packed,
+                quantizer=None, trees=forest, F=state["F"], Fv=None,
+                key=state["key"], history=history, best_loss=float("inf"),
+                best_round=-1, cfg_meta=dict(_resume_cfg_snapshot(cfg),
+                                             loss=cfg.loss),
+                keep_n=cfg.ckpt_keep)
+
+    restore_fn = None
+    if cfg.resume_from:
+        from repro.io import checkpoint as CK
+
+        def restore_fn():
+            st = CK.load_boost_checkpoint(cfg.resume_from)
+            _check_resume_compat(cfg, st)
+            if tuple(st.F.shape) != (n, d):
+                raise ValueError(
+                    f"resume_from checkpoint holds training scores of "
+                    f"shape {tuple(st.F.shape)} but codes/cfg give "
+                    f"({n}, {d}); resume must use the same training data")
+            prefix = st.trees
+            if isinstance(prefix, T.Forest):
+                prefix = T.Tree(**prefix._asdict())
+            history.extend(st.history)
+            # Elastic restart: the step's host arrays are laid out on THIS
+            # mesh — possibly a survivor subset of the mesh that wrote it.
+            F = E.remesh(jnp.asarray(st.F, jnp.float32), f_sharding)
+            return {"F": F, "key": st.key, "trees": [prefix]}, st.round
+
+    def step_fn(state, it):
+        for c in chaos:
+            mutate = getattr(c, "mutate_targets", None)
+            if mutate is not None:
+                Y_box[0] = mutate(Y_box[0], it)
+        key, sub = jax.random.split(state["key"])
+        F, tree = step(state["F"], codes, Y_box[0], sub)
+        if cfg.guard_policy == "raise":
+            GU.check_scores_host(F, it)
+        metrics: Dict[str, Any] = {}
         if eval_every and it % eval_every == 0:
-            history.append({"round": it, "train_loss": float(evaluate(F, Y))})
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-    return F, _as_forest(stacked), history
+            tl = float(evaluate(F, Y_box[0]))
+            history.append({"round": it, "train_loss": tl})
+            metrics["train_loss"] = tl
+        # Rounds append as 1-round stacked chunks: concat(chunks) is bitwise
+        # the stack the pre-fault-tolerance loop built.
+        trees = state["trees"] + [jax.tree.map(lambda x: x[None], tree)]
+        return {"F": F, "key": key, "trees": trees}, metrics
+
+    loop = FT.RestartableLoop(
+        "", step_fn, save_every=cfg.save_every, keep_n=cfg.ckpt_keep,
+        async_save=False, save_fn=save_fn, restore_fn=restore_fn,
+        chaos=chaos, watchdog=watchdog)
+    state, _done = loop.run({"F": F0, "key": jax.random.key(cfg.seed),
+                             "trees": []}, None, rounds)
+    stacked = _concat_chunks(state["trees"])
+    return state["F"], _as_forest(stacked), history
 
 
 def gbdt_input_specs(n: int, m: int, d: int, mesh: Mesh, cfg: GBDTConfig, *,

@@ -1,0 +1,129 @@
+"""Non-finite guards: keep one NaN row from killing a 500-round fit.
+
+Long multioutput boosting runs are where numeric failures concentrate: a
+single corrupt target, a saturated link function, or an overflowing custom
+loss poisons the gradients, and without protection every subsequent round —
+and the final forest — is garbage.  This module is the single place the
+trainer's numeric hygiene lives; `boosting._boost_round` and the distributed
+`local_step` both route their gradient/hessian/sketched-stats tensors
+through it, controlled by ``GBDTConfig.guard_policy``:
+
+  * ``"off"``         — no checks (the pre-PR-7 behavior; zero overhead).
+  * ``"raise"``       — nothing is sanitized, so non-finite gradients poison
+                        the raw scores F; the HOST loop detects the poisoned
+                        F at its next sync boundary and raises
+                        `NonFiniteError` naming the round.  (Raising cannot
+                        happen inside jitted code, and poisoning-then-
+                        detecting keeps the traced program branch-free.)
+  * ``"skip_round"``  — the round's tree is grown from sanitized stats but
+                        its leaf values and gains are zeroed whenever ANY
+                        input was non-finite: the round becomes a no-op
+                        (F unchanged, prediction contribution zero) and
+                        training continues.
+  * ``"clip"``        — non-finite entries are replaced (NaN -> 0,
+                        +/-inf -> +/-``guard_clip``) and gradients clamped
+                        to ``[-guard_clip, guard_clip]``; training proceeds
+                        on the repaired tensors.
+
+Independent of the policy, ``GBDTConfig.hessian_floor > 0`` floors the
+per-sample hessian channel before the leaf pass — leaf values are
+``-g/(h + lam)``, so a tiny/denormal hessian sum under near-zero ``lam``
+produces exploding leaves; the floor bounds them (CatBoost's
+``leaf_estimation`` guard, restated for the diagonal-hessian setting).
+
+Histograms are sums of the (sanitized) per-row stats over finite bin codes,
+so guarding the stats guards the histograms; the sketched stats are checked
+AGAIN after `core.sketch.build_sketch` because a projection can overflow on
+its own (inf * finite, eigh on a degenerate Gram), which would otherwise
+reach the histogram engine unseen.
+
+Everything here is pure and traceable — no host callbacks, no time, no
+nondeterminism inside jit (the chaos-harness contract).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+GUARD_POLICIES = ("off", "raise", "skip_round", "clip")
+
+
+class NonFiniteError(FloatingPointError):
+    """Raised (host-side) by the ``"raise"`` guard policy when non-finite
+    gradients/hessians poisoned the raw scores, naming the first bad round
+    the sync boundary could attribute it to."""
+
+    def __init__(self, round_idx: int, where: str = "training scores"):
+        self.round = int(round_idx)
+        super().__init__(
+            f"non-finite values detected in {where} at boosting round "
+            f"{self.round} under guard_policy='raise'; inspect the "
+            "targets/loss for NaN/inf at this round, or rerun with "
+            "guard_policy='skip_round' (drop the bad round) or 'clip' "
+            "(repair the gradients) to train through it")
+
+
+def nonfinite_any(x: jax.Array) -> jax.Array:
+    """Scalar bool: does ``x`` contain NaN or +/-inf?"""
+    return ~jnp.all(jnp.isfinite(x))
+
+
+def sanitize(x: jax.Array, clip: float) -> jax.Array:
+    """NaN -> 0, +/-inf -> +/-clip, finite values clamped to [-clip, clip]."""
+    c = jnp.float32(clip)
+    return jnp.clip(jnp.nan_to_num(x, nan=0.0, posinf=clip, neginf=-clip),
+                    -c, c)
+
+
+def guard_grad_hess(G: jax.Array, H: jax.Array, policy: str,
+                    clip: float, hessian_floor: float
+                    ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """The gradient/hessian guard pass.
+
+    Returns ``(G, H, bad)`` where ``bad`` is a scalar bool flag (``None``
+    when the policy performs no detection).  Under ``skip_round``/``clip``
+    the returned tensors are sanitized — hessians additionally clamped to
+    ``>= 0`` (a diagonal hessian is non-negative for every supported loss;
+    a negative value can only be corruption) — so everything downstream
+    (weights, sketch, histograms, leaf pass) computes on finite inputs.
+    Under ``off``/``raise`` the tensors pass through untouched (raise
+    EXPECTS the poison to propagate to F for host-side detection).  The
+    hessian floor applies under every policy when positive.
+    """
+    bad = None
+    if policy in ("skip_round", "clip"):
+        bad = nonfinite_any(G) | nonfinite_any(H)
+        G = sanitize(G, clip)
+        H = jnp.maximum(sanitize(H, clip), 0.0)
+    if hessian_floor > 0.0:
+        H = jnp.maximum(H, jnp.float32(hessian_floor))
+    return G, H, bad
+
+
+def guard_stats(stats: jax.Array, policy: str, clip: float,
+                bad: Optional[jax.Array]) -> Tuple[jax.Array,
+                                                   Optional[jax.Array]]:
+    """Guard the post-sketch split-search stats (histogram inputs)."""
+    if policy in ("skip_round", "clip"):
+        flag = nonfinite_any(stats)
+        bad = flag if bad is None else (bad | flag)
+        stats = sanitize(stats, clip)
+    return stats, bad
+
+
+def skip_scale(bad: Optional[jax.Array], policy: str) -> jax.Array:
+    """Per-round multiplier for leaf values/gains: 0 when this round must be
+    skipped, 1 otherwise."""
+    if policy != "skip_round" or bad is None:
+        return jnp.float32(1.0)
+    return jnp.where(bad, jnp.float32(0.0), jnp.float32(1.0))
+
+
+def check_scores_host(F, round_idx: int) -> None:
+    """Host-boundary detector for the ``raise`` policy: non-finite raw
+    scores mean a poisoned round at or before ``round_idx``."""
+    import numpy as np
+    if not np.all(np.isfinite(np.asarray(F))):
+        raise NonFiniteError(round_idx)

@@ -4,10 +4,27 @@ Continuous feature values are bucketed into quantile bins once before boosting
 (the pre-processing step of the histogram algorithm, Sec. 3.4 of the paper; same
 scheme as Py-Boost/LightGBM).  NaNs map to a dedicated bin 0, matching Py-Boost's
 "numeric features with possibly NaN values" support.
+
+Missing-value routing
+---------------------
+``MISSING_BIN = 0`` is a first-class bin of the histogram engine: missing
+rows accumulate their gradient stats into bin 0 like any other bin, the
+split scan legally considers threshold 0 (``split.split_scores`` marks only
+the LAST bin illegal), and routing sends ``code > thr`` right — so a
+``thr = 0`` split isolates exactly the missing rows, and every ``thr >= 1``
+split sends missing rows left with the low bins.  The trainer therefore
+learns missing-vs-present splits from the data with no special cases
+anywhere downstream (asserted by tests/test_fault_tolerance.py).  NaN is
+the ONLY supported missing encoding: ``+/-inf`` in features is rejected by
+input validation (`boosting.validate_features`) rather than silently
+landing in the extreme bins.  All-NaN columns get every edge pinned to
+``+inf`` — their rows all land in bin 0 and the feature is simply never
+split on.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -15,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 MAX_BINS = 256
+MISSING_BIN = 0    # uint8 code of the dedicated NaN/missing bin
 
 
 class Quantizer(NamedTuple):
@@ -42,7 +60,11 @@ def fit_quantizer(X: np.ndarray, n_bins: int = MAX_BINS,
         rng = np.random.default_rng(seed)
         X = X[rng.choice(n, sample_rows, replace=False)]
     qs = np.linspace(0.0, 1.0, n_bins)[1:-1]               # n_bins - 2 interior cuts
-    with np.errstate(all="ignore"):
+    with np.errstate(all="ignore"), warnings.catch_warnings():
+        # All-NaN columns are legal (every row is missing): nanquantile
+        # warns and yields NaN edges, which become +inf below — the feature
+        # bins everything to MISSING_BIN and is never split on.
+        warnings.simplefilter("ignore", category=RuntimeWarning)
         edges = np.nanquantile(X.astype(np.float64), qs, axis=0).T  # (m, n_bins-2)
     edges = np.concatenate([edges, np.full((m, 1), np.inf)], axis=1)
     edges = np.nan_to_num(edges, nan=np.inf, posinf=np.inf)

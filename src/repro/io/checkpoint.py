@@ -14,9 +14,10 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 Tree = Any
@@ -31,6 +32,29 @@ def _flatten_with_paths(tree: Tree) -> List[Tuple[str, Any]]:
                         for p in path)
         out.append((key, leaf))
     return out
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """Durability for renames: fsync the containing directory so the new
+    directory entry survives a power loss (POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:          # platforms without dir fds: rename is still atomic
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 class CheckpointManager:
@@ -77,20 +101,33 @@ class CheckpointManager:
         tmp = os.path.join(self.root, f".tmp_step_{step}_{os.getpid()}")
         final = os.path.join(self.root, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "state.npz"),
-                 **{k: v for k, v in items})
+        # Write order inside the temp dir: state first, manifest LAST — a
+        # crash mid-save can only ever leave a step dir without a readable
+        # manifest, which every reader treats as invalid (see _is_valid).
+        state_path = os.path.join(tmp, "state.npz")
+        with open(state_path, "wb") as f:
+            np.savez(f, **{k: v for k, v in items})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {"step": step, "time": time.time(),
                     "keys": [k for k, _ in items],
                     "metadata": metadata}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)                     # atomic publish
+        _fsync_dir(self.root)
         ptr_tmp = os.path.join(self.root, ".LATEST_tmp")
         with open(ptr_tmp, "w") as f:
             f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(ptr_tmp, os.path.join(self.root, "LATEST"))
+        _fsync_dir(self.root)
         self._gc()
 
     def wait(self):
@@ -99,20 +136,54 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self):
-        steps = sorted(self.all_steps())
+        """Prune old checkpoints.  Only VALID steps count toward ``keep_n``
+        and only valid steps beyond it are deleted, so the newest valid
+        checkpoint is never removed — even when a crash mid-save left a
+        younger, manifest-less corpse next to it (that corpse is swept as
+        garbage instead).  Stale ``.tmp_*`` dirs from crashed writers are
+        removed too."""
+        steps = self.all_steps()                   # valid steps, sorted
         for s in steps[:-self.keep_n] if self.keep_n else []:
             shutil.rmtree(os.path.join(self.root, f"step_{s}"),
                           ignore_errors=True)
+        for name in os.listdir(self.root):
+            path = os.path.join(self.root, name)
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(path, ignore_errors=True)
+            elif name.startswith("step_"):
+                try:
+                    s = int(name.split("_", 1)[1])
+                except ValueError:
+                    continue
+                if s not in steps and not self._is_valid(s):
+                    shutil.rmtree(path, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
+    def _is_valid(self, step: int) -> bool:
+        """A step is valid iff its manifest parses and the state file exists
+        (the write order in `_write` makes the manifest the commit record)."""
+        d = os.path.join(self.root, f"step_{step}")
+        if not os.path.exists(os.path.join(d, "state.npz")):
+            return False
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                json.load(f)
+            return True
+        except (OSError, ValueError):
+            return False
+
     def all_steps(self) -> List[int]:
+        """Valid (manifest-complete) steps, ascending.  Corrupt step dirs
+        left by a crash mid-save are excluded."""
         out = []
         for name in os.listdir(self.root):
             if name.startswith("step_"):
                 try:
-                    out.append(int(name.split("_", 1)[1]))
+                    s = int(name.split("_", 1)[1])
                 except ValueError:
-                    pass
+                    continue
+                if self._is_valid(s):
+                    out.append(s)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -120,7 +191,7 @@ class CheckpointManager:
         if os.path.exists(ptr):
             with open(ptr) as f:
                 s = int(f.read().strip())
-            if os.path.exists(os.path.join(self.root, f"step_{s}")):
+            if self._is_valid(s):
                 return s
         steps = self.all_steps()                  # fall back to a dir scan
         return steps[-1] if steps else None
@@ -154,6 +225,28 @@ class CheckpointManager:
             tree = jax.tree.map(jax.numpy.asarray, tree)
         return tree, step
 
+    def restore_raw(self, step: Optional[int] = None
+                    ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Template-free restore: ``({flat_key: host_array}, step)``.
+
+        Keys are the ``/``-joined pytree paths `save` wrote; callers that
+        know their own layout (e.g. `load_boost_checkpoint`) rebuild
+        structures explicitly instead of supplying a ``like`` template."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        data = np.load(os.path.join(self.root, f"step_{step}", "state.npz"))
+        dtypes = self.manifest(step).get("metadata", {}).get("_dtypes", {})
+        import ml_dtypes  # noqa: F401  (registers bfloat16 & friends)
+        out = {}
+        for k in data.files:
+            arr = data[k]
+            if k in dtypes:
+                arr = arr.view(np.dtype(dtypes[k]))
+            out[k] = arr
+        return out, step
+
     def manifest(self, step: int) -> Dict:
         with open(os.path.join(self.root, f"step_{step}",
                                "manifest.json")) as f:
@@ -176,12 +269,22 @@ class CheckpointManager:
 #       (terminal self-loops), ``node_count`` rides along, and the static
 #       walk bound ``depth`` lives in the manifest (it parameterizes
 #       compiled loop lengths, so it is metadata, not an array).
+#   4 — PR 7 (fault tolerance): same forest layout as v3, plus an OPTIONAL
+#       ``train/*`` subtree (raw stacked training-forest buffers, raw
+#       scores F (+ eval scores Fv), the RNG key-schedule position, round
+#       counter, eval history and early-stop state in the manifest's
+#       ``train`` block) that makes the step RESUMABLE: `SketchBoost.fit` /
+#       `fit_distributed` with ``cfg.resume_from`` continue bit-identically
+#       to the uninterrupted run.  Every v4 training checkpoint is also a
+#       complete serving checkpoint (the forest fields are the packed
+#       prefix).
 # Loaders are backward compatible: manifests without ``format_version`` are
 # v1; v1/v2 heap steps are upgraded in memory through
-# `core.forest.heap_packed_to_pointer` (bit-identical predictions); fields
-# absent from the manifest load as ``None`` (explainability degrades
-# gracefully — prediction is unaffected).
-FOREST_FORMAT_VERSION = 3
+# `core.forest.heap_packed_to_pointer` (bit-identical predictions); v3
+# steps are v4 steps without train state (serving works, resume raises an
+# informative error); fields absent from the manifest load as ``None``
+# (explainability degrades gracefully — prediction is unaffected).
+FOREST_FORMAT_VERSION = 4
 
 
 def save_forest_checkpoint(root: str, packed, quantizer=None, *,
@@ -252,3 +355,123 @@ def load_forest_checkpoint(root: str, step: Optional[int] = None):
         quantizer = Quantizer(edges=tree["quantizer"]["edges"],
                               n_bins=int(tree["quantizer"]["n_bins"]))
     return packed, quantizer, meta
+
+
+# ---------------------------------------------------------------------------
+# GBDT training checkpoints (format v4): the serving forest fields PLUS the
+# resume state — raw stacked training buffers, scores, RNG schedule position,
+# eval history and early-stop state.  `SketchBoost.fit(cfg.save_every)` /
+# `fit_distributed` write these at round boundaries; ``cfg.resume_from``
+# restores and continues bit-identically (tests/test_fault_tolerance.py).
+# ---------------------------------------------------------------------------
+
+class BoostState(NamedTuple):
+    """Everything needed to resume a boosting run at a round boundary."""
+    packed: Any               # PackedForest prefix (serving-complete)
+    quantizer: Any            # Quantizer | None
+    trees: Any                # raw stacked tree.Forest | tree.NodeTree
+    F: np.ndarray             # (n, d) raw train scores at the boundary
+    Fv: Optional[np.ndarray]  # (nv, d) eval scores | None
+    key: Any                  # jax typed PRNG key at the boundary
+    round: int                # completed rounds
+    history: List[Dict]       # eval-history records so far
+    best_loss: float          # early-stop tracker (inf if no eval yet)
+    best_round: int
+    meta: Dict                # full manifest metadata
+
+
+def save_boost_checkpoint(root: str, *, round_done: int, packed,
+                          quantizer, trees, F, Fv, key,
+                          history: List[Dict], best_loss: float,
+                          best_round: int, cfg_meta: Dict,
+                          keep_n: int = 3) -> None:
+    """Write a resumable (and serving-complete) training checkpoint.
+
+    ``trees`` is the RAW stacked training forest (`tree.Forest` heap buffers
+    or a stacked `tree.NodeTree`) for the completed-round prefix — stored
+    verbatim so resume needs no pack/unpack round trip; ``packed`` is the
+    same prefix through `forest.pack_forest`, making the step loadable by
+    `load_forest_checkpoint` / `ForestServer` unchanged.  ``key`` is the
+    typed PRNG key AT the round boundary (i.e. the key the next round would
+    split), so replay continues the exact schedule.  ``cfg_meta`` is the
+    schedule-critical config snapshot `load_boost_checkpoint` validates
+    against the resuming config.
+    """
+    forest_dict = {k: v for k, v in packed._asdict().items()
+                   if v is not None and k != "depth"}
+    tree_dict = {k: v for k, v in trees._asdict().items() if v is not None}
+    train: Dict[str, Any] = {
+        "trees": tree_dict,
+        "F": np.asarray(F, np.float32),
+        "key": np.asarray(jax.random.key_data(key)),
+    }
+    if Fv is not None:
+        train["Fv"] = np.asarray(Fv, np.float32)
+    state: Dict[str, Any] = {"forest": forest_dict, "train": train}
+    if quantizer is not None:
+        state["quantizer"] = {"edges": quantizer.edges,
+                              "n_bins": np.int32(quantizer.n_bins)}
+    meta = dict(cfg_meta.get("extra_meta") or {})
+    meta.update(
+        kind="packed_forest", fields=list(forest_dict),
+        has_quantizer=quantizer is not None, depth=int(packed.depth),
+        format_version=FOREST_FORMAT_VERSION,
+        loss=cfg_meta.get("loss", meta.get("loss")),
+        train={
+            "round": int(round_done),
+            "tree_kind": type(trees).__name__,      # "Forest" | "NodeTree"
+            "tree_fields": list(tree_dict),
+            "has_eval": Fv is not None,
+            "history": history,
+            # JSON has no inf: None encodes "no eval seen yet".
+            "best_loss": (None if not np.isfinite(best_loss)
+                          else float(best_loss)),
+            "best_round": int(best_round),
+            "cfg": {k: v for k, v in cfg_meta.items() if k != "extra_meta"},
+        })
+    mgr = CheckpointManager(root, keep_n=keep_n, async_save=False)
+    mgr.save(round_done, state, metadata=meta)
+
+
+def load_boost_checkpoint(root: str, step: Optional[int] = None
+                          ) -> BoostState:
+    """Restore a `save_boost_checkpoint` step for resumption."""
+    from repro.core import tree as T
+    from repro.core.forest import PackedForest
+    from repro.core.quantize import Quantizer
+
+    mgr = CheckpointManager(root, async_save=False)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    meta = dict(mgr.manifest(step).get("metadata", {}))
+    train_meta = meta.get("train")
+    if meta.get("kind") != "packed_forest" or train_meta is None:
+        raise ValueError(
+            f"checkpoint step_{step} under {root} has no train state "
+            f"(kind={meta.get('kind')!r}, format_version="
+            f"{meta.get('format_version', 1)}): it is a serving-only "
+            "checkpoint and cannot seed a resume — retrain with "
+            "cfg.save_every > 0 to produce resumable (v4) steps")
+    raw, _ = mgr.restore_raw(step)
+    forest = {f: jnp.asarray(raw[f"forest/{f}"]) for f in meta["fields"]}
+    packed = PackedForest(**forest, depth=int(meta["depth"]))
+    quantizer = None
+    if meta.get("has_quantizer"):
+        quantizer = Quantizer(edges=jnp.asarray(raw["quantizer/edges"]),
+                              n_bins=int(raw["quantizer/n_bins"]))
+    tree_cls = {"Forest": T.Forest, "NodeTree": T.NodeTree}[
+        train_meta["tree_kind"]]
+    trees = tree_cls(**{f: jnp.asarray(raw[f"train/trees/{f}"])
+                        for f in train_meta["tree_fields"]})
+    best = train_meta.get("best_loss")
+    return BoostState(
+        packed=packed, quantizer=quantizer, trees=trees,
+        F=raw["train/F"],
+        Fv=raw.get("train/Fv"),
+        key=jax.random.wrap_key_data(jnp.asarray(raw["train/key"])),
+        round=int(train_meta["round"]),
+        history=list(train_meta.get("history", [])),
+        best_loss=(float("inf") if best is None else float(best)),
+        best_round=int(train_meta.get("best_round", -1)),
+        meta=meta)

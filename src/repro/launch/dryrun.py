@@ -33,7 +33,7 @@ from repro.models import lm
 from repro.models.config import LM_SHAPES, ModelConfig, ShapeCell, shape_by_name
 from repro.roofline import analysis as RA
 from repro.training import optimizer as opt
-from repro.training import serve_lib, train_lib
+from repro.training import lm_serve, train_lib
 
 SKIP_LONG = "skip: long_500k needs sub-quadratic attention (DESIGN.md §4)"
 
@@ -74,15 +74,15 @@ def lower_train_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
             return jax.jit(step, donate_argnums=(0, 1)).lower(
                 params_abs, opt_abs, specs, step_abs)
     # prefill: forward to last-token logits
-    pre = serve_lib.make_prefill_step(cfg, mesh)
+    pre = lm_serve.make_prefill_step(cfg, mesh)
     with mesh:
         return jax.jit(pre).lower(params_abs, specs)
 
 
 def lower_decode_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
     """AOT-lower one serve_step (1 new token, cache of cell.seq_len)."""
-    scfg = serve_lib.ServeConfig(max_seq_len=cell.seq_len, temperature=0.0)
-    step = serve_lib.make_serve_step(cfg, scfg, mesh)
+    scfg = lm_serve.ServeConfig(max_seq_len=cell.seq_len, temperature=0.0)
+    step = lm_serve.make_serve_step(cfg, scfg, mesh)
     baxes = _batch_axes(mesh, cfg)
     params_abs = lm.abstract(cfg, mesh)
     cache_abs = lm.abstract_cache(cfg, cell.global_batch, cell.seq_len, mesh,

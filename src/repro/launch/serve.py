@@ -10,13 +10,23 @@ With ``--explain`` the same driver exercises the explanation serving path:
 micro-batched TreeSHAP over the request stream (per-request latency), plus a
 top-k attribution report and checkpoint-only feature importances.
 
+With ``--chaos`` the driver instead runs the overload/admission smoke: a
+deterministic burst (virtual clock, no sleeping) that forces queue shedding,
+deadline drops, and fallback-forest scoring, then asserts every degradation
+counter fired and writes the stats to ``--stats-out`` — the CI artifact
+proving the server degrades instead of falling over (docs/robustness.md).
+
   PYTHONPATH=src python -m repro.launch.serve --demo --requests 64
   PYTHONPATH=src python -m repro.launch.serve --ckpt /ckpts/otto --requests 256
   PYTHONPATH=src python -m repro.launch.serve --demo --explain --topk 5
+  PYTHONPATH=src python -m repro.launch.serve --demo --chaos \
+      --stats-out results/serve_chaos.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -43,6 +53,54 @@ def _train_demo(ckpt_dir: str, seed: int):
     return X.shape[1]
 
 
+def _chaos_smoke(args) -> None:
+    """Deterministic overload drill: overwhelm the admission queue, expire a
+    deadline on the virtual clock, trip the fallback forest, and fail loudly
+    unless every degradation path both fired and kept serving."""
+    from repro.runtime.chaos import VirtualClock
+    from repro.training.serve_lib import ForestServeConfig, ForestServer
+
+    clock = VirtualClock()
+    server = ForestServer.from_checkpoint(
+        args.ckpt, max_batch=args.max_batch, max_queue_rows=4 * args.rows,
+        deadline_ms=50.0, overload_rows=2 * args.rows, clock=clock)
+    m = args.features or server.quantizer.edges.shape[0]
+    rng = np.random.default_rng(args.seed)
+    reqs = [rng.normal(size=(args.rows, m)).astype(np.float32)
+            for _ in range(max(8, args.requests))]
+
+    # Burst 1: six requests into a four-request queue -> two shed; the four
+    # admitted rows exceed overload_rows -> fallback-forest scoring.
+    admitted = [server.submit(r) for r in reqs[:6]]
+    outs = server.drain()
+    served = sum(o is not None for o in outs)
+    # Burst 2: admit two, expire one on the virtual clock before draining.
+    server.submit(reqs[6], deadline_ms=10.0)
+    server.submit(reqs[7], deadline_ms=500.0)
+    clock.advance(0.1)
+    outs2 = server.drain()
+
+    s = server.stats
+    print(f"[serve-chaos] admitted={sum(admitted)}/6 served={served} "
+          f"shed={s['shed_requests']} deadline={s['deadline_requests']} "
+          f"fallback_batches={s['fallback_batches']} errors={s['errors']}")
+    ok = (s["shed_requests"] == 2 and s["deadline_requests"] == 1
+          and s["fallback_batches"] >= 1 and s["errors"] == 0
+          and served == 4 and outs2[0] is None and outs2[1] is not None)
+    if args.stats_out:
+        os.makedirs(os.path.dirname(args.stats_out) or ".", exist_ok=True)
+        with open(args.stats_out, "w") as f:
+            json.dump({"ok": ok, "stats": s,
+                       "best_iteration": server.best_iteration,
+                       "fallback_rounds": server._fallback_packed().n_rounds},
+                      f, indent=1)
+        print(f"[serve-chaos] stats written to {args.stats_out}")
+    if not ok:
+        raise SystemExit(f"[serve-chaos] FAIL: degradation counters off: {s}")
+    print("[serve-chaos] OK: shed, deadline-drop, and fallback paths all "
+          "fired; no errors")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--ckpt", default="/tmp/repro_serve_gbdt",
@@ -62,11 +120,20 @@ def main():
                     "print a top-k attribution report")
     ap.add_argument("--topk", type=int, default=3,
                     help="features per output in the --explain report")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the deterministic overload/admission smoke "
+                         "instead of the throughput driver")
+    ap.add_argument("--stats-out", default="",
+                    help="write the --chaos stats artifact (JSON) here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.demo:
         _train_demo(args.ckpt, args.seed)
+
+    if args.chaos:
+        _chaos_smoke(args)
+        return
 
     from repro.training.serve_lib import ForestServer
     server = ForestServer.from_checkpoint(args.ckpt,

@@ -106,7 +106,11 @@ def train_gbdt(args) -> Dict[str, Any]:
     cfg = GBDTConfig(loss="multiclass", n_trees=args.trees, depth=6,
                      sketch_method=args.sketch, sketch_k=args.sketch_k,
                      learning_rate=args.lr if args.lr != 3e-4 else 0.1,
-                     early_stopping_rounds=50)
+                     early_stopping_rounds=50,
+                     guard_policy=args.guard_policy,
+                     save_every=args.save_every if args.ckpt_dir else 0,
+                     ckpt_dir=args.ckpt_dir,
+                     resume_from=args.ckpt_dir if args.resume else "")
     t0 = time.perf_counter()
     model = SketchBoost(cfg).fit(Xtr, ytr, eval_set=(Xte, yte), verbose=True)
     dt = time.perf_counter() - t0
@@ -152,7 +156,11 @@ def train_gbdt_dist(args) -> Dict[str, Any]:
         learning_rate=args.lr if args.lr != 3e-4 else 0.1, seed=args.seed,
         use_kernel=False,
         dist_hist_compression="sketch" if args.compress else "none",
-        dist_hist_k=args.compress_rank if args.compress else 0)
+        dist_hist_k=args.compress_rank if args.compress else 0,
+        guard_policy=args.guard_policy,
+        save_every=args.save_every if args.ckpt_dir else 0,
+        ckpt_dir=args.ckpt_dir,
+        resume_from=args.ckpt_dir if args.resume else "")
     q = Q.fit_quantizer(Xtr, cfg.n_bins)
     codes_tr = Q.apply_quantizer(q, jnp.asarray(Xtr))
     t0 = time.perf_counter()
@@ -193,8 +201,16 @@ def main():
     ap.add_argument("--compress", action="store_true",
                     help="sketched cross-pod gradient all-reduce")
     ap.add_argument("--compress-rank", type=int, default=32)
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory; for the GBDT this enables "
+                         "resumable round-boundary (format-v4) checkpoints")
     ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the GBDT fit from --ckpt-dir's latest "
+                         "round checkpoint (bit-identical continuation)")
+    ap.add_argument("--guard-policy", default="off",
+                    choices=["off", "raise", "skip_round", "clip"],
+                    help="non-finite gradient guard (docs/robustness.md)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")

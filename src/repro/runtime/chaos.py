@@ -1,0 +1,188 @@
+"""Deterministic fault injection for the fault-tolerance test suites.
+
+Every injection here is *host-side and round/step-addressed*: a fault fires
+when the training loop reaches a declared round boundary (or a server is
+driven past a declared virtual time), never from wall-clock or signals, so a
+failing chaos test replays identically under a fixed seed.  Nothing in this
+module runs inside jitted code — the loops in `core.boosting` /
+`core.distributed` / `runtime.fault` consult the injections between device
+dispatches (scan segments are capped at chaos rounds so injections land on
+exact round boundaries).
+
+The training loops duck-type against three optional hooks, so chaos objects
+need no common base class and `core` never imports `runtime`:
+
+  * ``check_round(r)``       — raise to simulate a crash (`KillAtRound`,
+                               `DropHost`).
+  * ``mutate_targets(Y, r)`` — corrupt training data from round ``r`` on
+                               (`NaNAtRow`); corruption is persistent, like a
+                               bad row landing in a storage shard.
+  * ``extra_time(r)``        — virtual seconds added to the observed step
+                               time (`DelayShard`), feeding
+                               `fault.StragglerWatchdog` without sleeping.
+  * ``round``                — the trigger boundary, read by the loops to cap
+                               compiled scan segments.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ChaosKill(RuntimeError):
+    """A simulated process kill at a round boundary."""
+
+    def __init__(self, round_idx: int):
+        self.round = int(round_idx)
+        super().__init__(f"chaos: killed at round {self.round}")
+
+
+class HostLost(RuntimeError):
+    """A simulated host loss (the elastic-restart trigger)."""
+
+    def __init__(self, round_idx: int, host: int = 0):
+        self.round = int(round_idx)
+        self.host = int(host)
+        super().__init__(
+            f"chaos: host {self.host} lost at round {self.round}")
+
+
+class KillAtRound:
+    """Raise `ChaosKill` when training reaches round ``round`` (i.e. after
+    rounds ``0..round-1`` completed).  Fires once: a resumed run driving the
+    same object sails past the trigger, which is exactly the
+    kill-then-resume shape the determinism suite wants."""
+
+    def __init__(self, round: int):
+        self.round = int(round)
+        self.fired = False
+
+    def check_round(self, round_idx: int) -> None:
+        if not self.fired and round_idx >= self.round:
+            self.fired = True
+            raise ChaosKill(round_idx)
+
+
+class DropHost:
+    """Raise `HostLost` at round ``round`` — the caller reacts by building a
+    survivor mesh and resuming from the last checkpoint (`elastic.remesh`
+    does the re-layout).  Fires once, like `KillAtRound`."""
+
+    def __init__(self, round: int, host: int = 0):
+        self.round = int(round)
+        self.host = int(host)
+        self.fired = False
+
+    def check_round(self, round_idx: int) -> None:
+        if not self.fired and round_idx >= self.round:
+            self.fired = True
+            raise HostLost(round_idx, self.host)
+
+
+class NaNAtRow:
+    """Overwrite target rows with NaN from round ``round`` onward.
+
+    Models a corrupt record reaching the training set mid-run: the guards
+    (`core.guards`, ``cfg.guard_policy``) are the subject under test.  The
+    corruption applies once (the loops carry the mutated Y forward), so the
+    gradients of every round >= ``round`` see it.
+    """
+
+    def __init__(self, round: int, rows: Iterable[int],
+                 outputs: Optional[Iterable[int]] = None):
+        self.round = int(round)
+        self.rows = tuple(int(r) for r in rows)
+        self.outputs = None if outputs is None else tuple(
+            int(c) for c in outputs)
+        self.applied = False
+
+    def mutate_targets(self, Y, round_idx: int):
+        if self.applied or round_idx < self.round:
+            return Y
+        self.applied = True
+        if not jnp.issubdtype(jnp.asarray(Y).dtype, jnp.floating):
+            raise ValueError(
+                "NaNAtRow corrupts float targets; integer class labels "
+                f"(dtype {jnp.asarray(Y).dtype}) cannot hold NaN — use a "
+                "dense-target loss (multilabel / multitask_mse) for "
+                "NaN-injection tests")
+        rows = jnp.asarray(self.rows, jnp.int32)
+        if self.outputs is None:
+            return Y.at[rows].set(jnp.nan)
+        cols = jnp.asarray(self.outputs, jnp.int32)
+        return Y.at[rows[:, None], cols[None, :]].set(jnp.nan)
+
+
+class DelayShard:
+    """Report ``extra_s`` virtual seconds of step time at the trigger rounds
+    (``round``, then every ``every`` rounds when ``every > 0``) — drives
+    `fault.StragglerWatchdog` deterministically, no sleeping."""
+
+    def __init__(self, round: int, extra_s: float, every: int = 0):
+        self.round = int(round)
+        self.extra_s = float(extra_s)
+        self.every = int(every)
+
+    def extra_time(self, round_idx: int) -> float:
+        if round_idx == self.round:
+            return self.extra_s
+        if (self.every > 0 and round_idx > self.round
+                and (round_idx - self.round) % self.every == 0):
+            return self.extra_s
+        return 0.0
+
+
+class VirtualClock:
+    """Injectable monotonic clock for serving tests: deadlines and queue age
+    advance only when the test says so."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def time(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+# -- loop-facing helpers (used by runtime.fault / core.distributed) ----------
+
+def as_chaos_list(chaos) -> Tuple[object, ...]:
+    if chaos is None:
+        return ()
+    if isinstance(chaos, (list, tuple)):
+        return tuple(chaos)
+    return (chaos,)
+
+
+def check_round_all(chaos: Sequence[object], round_idx: int) -> None:
+    for c in chaos:
+        check = getattr(c, "check_round", None)
+        if check is not None:
+            check(round_idx)
+
+
+def total_extra_time(chaos: Sequence[object], round_idx: int) -> float:
+    total = 0.0
+    for c in chaos:
+        extra = getattr(c, "extra_time", None)
+        if extra is not None:
+            total += float(extra(round_idx))
+    return total
+
+
+def nan_at_rows(X: np.ndarray, rows: Iterable[int],
+                cols: Optional[Iterable[int]] = None) -> np.ndarray:
+    """Host-side feature corruption helper (NaN = missing, exercised by the
+    missing-bin routing tests): returns a poisoned copy."""
+    X = np.array(X, np.float32, copy=True)
+    r = np.asarray(tuple(rows), np.int64)
+    if cols is None:
+        X[r] = np.nan
+    else:
+        X[np.ix_(r, np.asarray(tuple(cols), np.int64))] = np.nan
+    return X

@@ -2,11 +2,20 @@
 
 The driver owns the checkpoint/restore cycle: on start it resumes from the
 latest valid checkpoint (atomic manifests guarantee validity), saves every
-``save_every`` steps asynchronously, and re-raises worker failures after
-persisting.  ``StragglerWatchdog`` tracks per-step wall-times and flags steps
-beyond ``threshold`` x the trailing median — on a real multi-host deployment
-the flag feeds the scheduler's hot-spare replacement; here it is surfaced in
-metrics (and unit-tested against synthetic timings).
+``save_every`` steps, and surfaces per-step straggler flags.  Originally an
+LM-era shell wired to nothing, it now drives real GBDT training:
+`core.distributed.fit_distributed` runs its round loop through this class
+(custom ``save_fn``/``restore_fn`` delegate persistence to the format-v4
+boost checkpoints of `io.checkpoint`, and ``shardings`` re-lays restored
+state onto the *current* mesh via `elastic.remesh` — the elastic-restart
+path), and `tests/test_runtime.py` exercises the same wiring on a
+single-device `boost_step` loop.
+
+``StragglerWatchdog`` tracks per-step wall-times and flags steps beyond
+``threshold`` x the trailing median — on a real multi-host deployment the
+flag feeds the scheduler's hot-spare replacement; here it is surfaced in
+metrics and driven deterministically by `chaos.DelayShard` (virtual extra
+seconds, no sleeping).
 """
 from __future__ import annotations
 
@@ -16,6 +25,8 @@ import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 from repro.io.checkpoint import CheckpointManager
+from repro.runtime import chaos as CH
+from repro.runtime import elastic as E
 
 Tree = Any
 
@@ -43,42 +54,95 @@ class RestartableLoop:
     ``state`` is any pytree (params, opt state, step counters, RNG);
     ``step_fn(state, batch) -> (state, metrics)`` must be deterministic given
     (state, batch) so restart-and-replay reproduces the same trajectory.
+
+    Persistence is pluggable: by default state round-trips through a
+    `CheckpointManager` under ``ckpt_dir`` (template-based restore), but a
+    caller can delegate with ``save_fn(step, state)`` /
+    ``restore_fn() -> (state, start_step) | None`` — how `fit_distributed`
+    writes resumable v4 boost checkpoints while reusing this loop's
+    watchdog, chaos, and save-cadence plumbing.  ``shardings`` (a pytree of
+    `NamedSharding` matching ``state``, or a single sharding applied to
+    every restored leaf... see `elastic.remesh`) re-lays restored state onto
+    the current mesh: checkpoints are mesh-agnostic host arrays, so this is
+    what makes a resume onto a *survivor* mesh (fewer hosts than wrote the
+    step) work.  ``chaos`` takes `runtime.chaos` injections: kill-style
+    hooks fire at step boundaries, `DelayShard` adds virtual time to the
+    watchdog's observations.
     """
 
     def __init__(self, ckpt_dir: str, step_fn: Callable, *,
                  save_every: int = 50, keep_n: int = 3,
-                 async_save: bool = True):
-        self.mgr = CheckpointManager(ckpt_dir, keep_n=keep_n,
-                                     async_save=async_save)
+                 async_save: bool = True,
+                 save_fn: Optional[Callable[[int, Tree], None]] = None,
+                 restore_fn: Optional[Callable[[], Any]] = None,
+                 shardings: Any = None, chaos: Any = None,
+                 watchdog: Optional[StragglerWatchdog] = None):
+        self.mgr = (CheckpointManager(ckpt_dir, keep_n=keep_n,
+                                      async_save=async_save)
+                    if ckpt_dir else None)
         self.step_fn = step_fn
         self.save_every = save_every
-        self.watchdog = StragglerWatchdog()
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.shardings = shardings
+        self.chaos = CH.as_chaos_list(chaos)
+        self.watchdog = watchdog or StragglerWatchdog()
+
+    def _save(self, step: int, state: Tree) -> None:
+        if self.save_fn is not None:
+            self.save_fn(step, state)
+        elif self.mgr is not None:
+            self.mgr.save(step, state)
 
     def resume_or_init(self, init_state: Tree):
-        latest = self.mgr.latest_step()
-        if latest is None:
-            return init_state, 0
-        state, step = self.mgr.restore(init_state)
-        return state, step + 1
+        if self.restore_fn is not None:
+            restored = self.restore_fn()
+            if restored is None:
+                return init_state, 0
+            state, start = restored
+        else:
+            if self.mgr is None or self.mgr.latest_step() is None:
+                return init_state, 0
+            state, step = self.mgr.restore(init_state)
+            start = step + 1
+        if self.shardings is not None:
+            state = E.remesh(state, self.shardings)
+        return state, start
 
-    def run(self, init_state: Tree, batches: Iterator, n_steps: int,
+    def run(self, init_state: Tree, batches: Optional[Iterator] = None,
+            n_steps: int = 0,
             on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        """Run up to ``n_steps`` steps with checkpoint/restart.
+
+        ``batches=None`` feeds ``step_fn`` the step INDEX as its batch —
+        the round-driven mode (a resumed loop must not replay consumed
+        batches, which an iterator cannot express).
+        """
         state, start = self.resume_or_init(init_state)
         step = start
-        for batch in batches:
-            if step >= n_steps:
-                break
+        while step < n_steps:
+            CH.check_round_all(self.chaos, step)
+            if batches is None:
+                batch = step
+            else:
+                try:
+                    batch = next(batches)
+                except StopIteration:
+                    break
             t0 = time.perf_counter()
             state, metrics = self.step_fn(state, batch)
-            dt = time.perf_counter() - t0
+            dt = (time.perf_counter() - t0
+                  + CH.total_extra_time(self.chaos, step))
             metrics = dict(metrics or {})
             metrics["step_time_s"] = dt
             metrics["straggler"] = self.watchdog.observe(dt)
             if on_metrics:
                 on_metrics(step, metrics)
             if self.save_every and (step + 1) % self.save_every == 0:
-                self.mgr.save(step, state)
+                self._save(step, state)
             step += 1
-        self.mgr.save(step - 1, state)
-        self.mgr.wait()
+        if step > start:
+            self._save(step - 1, state)
+        if self.mgr is not None:
+            self.mgr.wait()
         return state, step

@@ -1,0 +1,58 @@
+"""LM decode serving shells (dry-run world only).
+
+Quarantined out of `training.serve_lib` so the production GBDT serving path
+carries no LM imports: these factories exist solely so `launch.dryrun` can
+AOT-lower decode/prefill shapes for the roofline — nothing here runs real
+inference, and nothing under `core`/`io`/`runtime` may import this module.
+The old `BatchedServer` continuous-batching sim was deleted with the move:
+it drove no test beyond its own smoke and its shared-cache shortcut made it
+misleading as a reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.training.train_lib import make_axis_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 2048
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: int = 1
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """``serve_step(params, cache, token, key) -> (next_token, cache)``."""
+    ctx = make_axis_ctx(mesh, cfg)
+
+    def serve_step(params, cache, token, key):
+        logits, cache = lm.decode_step(params, cfg, cache, token, ctx)
+        mask = lm.vocab_mask(cfg)
+        if mask is not None:
+            logits = logits + mask
+        if scfg.temperature > 0:
+            nxt = jax.random.categorical(key, logits / scfg.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    ctx = make_axis_ctx(mesh, cfg)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, ctx)
+
+    return prefill_step

@@ -1,38 +1,35 @@
-"""Serving.
+"""GBDT forest serving: batched scoring with admission control.
 
-Two serving stacks share this module:
+`ForestServer` is the production path for the SketchBoost side of the repo:
+load a checkpointed `core.forest.PackedForest` (+ quantizer), micro-batch
+incoming requests into padded power-of-two buckets (bounded compile cache),
+and score them through the compiled packed-forest engine / Pallas traversal
+kernel.  See docs/inference.md and docs/robustness.md.
 
-* **GBDT forest serving** (`ForestServer`) — the production path for the
-  SketchBoost side of the repo: load a checkpointed `core.forest.PackedForest`
-  (+ quantizer), micro-batch incoming requests into padded power-of-two
-  buckets (bounded compile cache), and score them through the compiled
-  packed-forest engine / Pallas traversal kernel.  See docs/inference.md.
-* **LM decode serving** (`BatchedServer`) — jitted decode step with sampling
-  plus a continuous-batching loop, the inference-side driver for the LM
-  dry-run world's decode shapes.
+Overload behavior is explicit rather than emergent: a bounded admission
+queue sheds requests past ``max_queue_rows``, per-request deadlines drop
+work that has already waited too long to be useful, and batches past
+``overload_rows`` are scored on a prefix of the forest
+(`core.forest.slice_rounds` at half the model's ``best_iteration``) —
+degraded accuracy over degraded latency, with every shed/drop/fallback
+counted in ``stats``.  All knobs default off, in which case the server
+behaves exactly like the unbounded scorer it used to be.
+
+The LM decode-serving shells that used to live here moved to
+`training.lm_serve` (dry-run world only); this module is GBDT-only.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
-
-from repro.models import lm
-from repro.models.config import ModelConfig
-from repro.training.train_lib import make_axis_ctx
 
 Tree = Any
 
-
-# ---------------------------------------------------------------------------
-# GBDT forest serving.
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class ForestServeConfig:
@@ -43,11 +40,34 @@ class ForestServeConfig:
     shapes ever exist); anything larger streams through the chunked predict
     in ``min(row_chunk, max_batch)`` slices — one more fixed shape, never a
     per-batch-size compile.
+
+    Admission control (all default OFF — zero means unlimited/disabled):
+
+    * ``max_queue_rows`` — bound on total rows queued via `submit`; a
+      request that would push the queue past the bound is SHED (submit
+      returns False, ``shed_requests``/``shed_rows`` count it).
+    * ``deadline_ms`` — default per-request deadline; requests still queued
+      past their deadline at `drain` time are dropped (``deadline_requests``
+      counts them) instead of burning compute on an answer nobody is
+      waiting for.
+    * ``overload_rows`` — batches larger than this score on the fallback
+      forest: the first ``fallback_rounds`` boosting rounds (default
+      ``best_iteration // 2``), trading accuracy for tail latency under
+      load (``fallback_batches``/``fallback_rows`` count it).
+    * ``fallback_rounds`` — explicit fallback prefix length (0 = derive
+      from ``best_iteration``).
+    * ``best_iteration`` — the model's early-stopped round count (0 = all
+      packed rounds); `from_checkpoint` fills it from training metadata.
     """
     loss: str = "multiclass"             # picks the predict_proba transform
     max_batch: int = 4096
     row_chunk: int = 65536
     use_kernel: Any = True               # same resolution as training
+    max_queue_rows: int = 0
+    deadline_ms: float = 0.0
+    overload_rows: int = 0
+    fallback_rounds: int = 0
+    best_iteration: int = 0
 
 
 class ForestServer:
@@ -56,11 +76,19 @@ class ForestServer:
     >>> server = ForestServer.from_checkpoint("/ckpts/otto")
     >>> proba = server.predict(X)                   # raw features in
     >>> outs = server.serve([req1, req2, req3])     # micro-batched requests
+
+    With admission knobs set, the queueing entry points apply backpressure:
+
+    >>> if server.submit(X, deadline_ms=50):        # False = shed
+    ...     outs = server.drain()                   # None = deadline-dropped
     """
 
     _ZERO_STATS = {"requests": 0, "rows": 0, "batches": 0,
                    "predict_time_s": 0.0, "explain_requests": 0,
-                   "explain_rows": 0, "explain_time_s": 0.0}
+                   "explain_rows": 0, "explain_time_s": 0.0,
+                   "shed_requests": 0, "shed_rows": 0,
+                   "deadline_requests": 0, "deadline_rows": 0,
+                   "fallback_batches": 0, "fallback_rows": 0, "errors": 0}
 
     @staticmethod
     def _concat_requests(requests: Sequence):
@@ -70,13 +98,20 @@ class ForestServer:
         return np.concatenate(blocks, axis=0), [b.shape[0] for b in blocks]
 
     def __init__(self, packed, quantizer=None,
-                 cfg: ForestServeConfig = ForestServeConfig()):
+                 cfg: ForestServeConfig = ForestServeConfig(), *,
+                 clock=None):
         from repro.core.histogram import resolve_kernel_mode
         self.packed = packed
         self.quantizer = quantizer
         self.cfg = cfg
         self.mode = resolve_kernel_mode(cfg.use_kernel)
         self._path_pack = None          # lazy per-model path-slot cache
+        self._fallback = None           # lazy sliced overload forest
+        # Injectable clock (chaos.VirtualClock in tests) so deadline
+        # behavior is deterministic; wall time in production.
+        self._now = clock.time if hasattr(clock, "time") else time.monotonic
+        self._queue: List[Tuple[Optional[float], np.ndarray]] = []
+        self._queued_rows = 0
         self.stats: Dict[str, Any] = dict(self._ZERO_STATS)
 
     @property
@@ -85,44 +120,68 @@ class ForestServer:
         >= 2) — the substrate for path-dependent SHAP and importances."""
         return self.packed.cover is not None
 
+    @property
+    def best_iteration(self) -> int:
+        """Early-stopped round count used to size the fallback forest."""
+        return self.cfg.best_iteration or self.packed.n_rounds
+
+    @property
+    def queue_depth(self) -> int:
+        """Rows currently admitted and waiting for `drain`."""
+        return self._queued_rows
+
     @classmethod
     def from_checkpoint(cls, root: str, step: Optional[int] = None,
                         **overrides) -> "ForestServer":
         """Build a server from a `save_forest_checkpoint` directory; the
-        checkpoint metadata supplies the loss/transform unless overridden."""
+        checkpoint metadata supplies the loss/transform (and, for training
+        checkpoints, ``best_iteration``) unless overridden."""
         from repro.io.checkpoint import load_forest_checkpoint
         packed, quantizer, meta = load_forest_checkpoint(root, step)
         if "loss" in meta:
             overrides.setdefault("loss", meta["loss"])
-        return cls(packed, quantizer, ForestServeConfig(**overrides))
+        if "best_iteration" in meta:
+            overrides.setdefault("best_iteration",
+                                 int(meta["best_iteration"]))
+        clock = overrides.pop("clock", None)
+        return cls(packed, quantizer, ForestServeConfig(**overrides),
+                   clock=clock)
 
     # -- scoring ------------------------------------------------------------
     def _codes(self, X) -> jax.Array:
+        from repro.core.boosting import validate_features
         from repro.core.quantize import apply_quantizer
-        X = jnp.asarray(np.asarray(X, np.float32))
-        if X.ndim == 1:
-            X = X[None]
         if self.quantizer is None:
             raise ValueError("server has no quantizer; pass raw bin codes "
                              "via predict_codes or checkpoint the quantizer")
-        return apply_quantizer(self.quantizer, X)
+        X = np.atleast_2d(np.asarray(X, np.float32))
+        X = validate_features(X, n_features=self.quantizer.edges.shape[0],
+                              where="request X")
+        return apply_quantizer(self.quantizer, jnp.asarray(X))
 
-    def predict_codes(self, codes: jax.Array) -> jax.Array:
-        """Raw scores for pre-binned codes (the no-quantizer entry)."""
+    def predict_codes(self, codes: jax.Array, *,
+                      packed=None) -> jax.Array:
+        """Raw scores for pre-binned codes (the no-quantizer entry).
+
+        ``packed`` overrides the scored forest — the overload-fallback path
+        passes the `slice_rounds` prefix; everything else scores the full
+        model.
+        """
         from repro.core import forest as FO
+        pf = self.packed if packed is None else packed
         n = codes.shape[0]
         t0 = time.perf_counter()
         if n > self.cfg.max_batch:
             # Chunk size is clamped to max_batch so the streaming path adds
             # at most ONE dispatch shape to the bounded pow-2 bucket set —
             # arbitrary batch sizes never compile per-size executables.
-            out = FO.predict_raw(self.packed, codes, mode=self.mode,
+            out = FO.predict_raw(pf, codes, mode=self.mode,
                                  row_chunk=min(self.cfg.row_chunk,
                                                self.cfg.max_batch))
         else:
             bucket = max(8, 1 << (max(n, 1) - 1).bit_length())
             padded = jnp.pad(codes, ((0, bucket - n), (0, 0)))
-            out = FO.predict_raw(self.packed, padded, mode=self.mode)[:n]
+            out = FO.predict_raw(pf, padded, mode=self.mode)[:n]
         out = jax.block_until_ready(out)
         self.stats["rows"] += int(n)
         self.stats["batches"] += 1
@@ -137,23 +196,109 @@ class ForestServer:
         from repro.core.losses import get_loss
         return get_loss(self.cfg.loss).transform(self.predict_raw(X))
 
-    def serve(self, requests: Sequence) -> List[np.ndarray]:
+    # -- admission control ---------------------------------------------------
+    def _fallback_packed(self):
+        """Overload forest: first ``fallback_rounds`` rounds (default half
+        the early-stopped iteration count), built once and cached."""
+        from repro.core import forest as FO
+        if self._fallback is None:
+            rounds = self.cfg.fallback_rounds or max(1,
+                                                     self.best_iteration // 2)
+            rounds = min(rounds, self.packed.n_rounds)
+            self._fallback = FO.slice_rounds(self.packed, rounds)
+        return self._fallback
+
+    def submit(self, X, deadline_ms: Optional[float] = None) -> bool:
+        """Admit one row-block request into the queue, or shed it.
+
+        Returns False (and counts the shed) when the queue bound would be
+        exceeded — the caller's signal to retry elsewhere/later.  The
+        deadline (request-level override, else ``cfg.deadline_ms``, else
+        none) is stamped against the injected clock at admission.
+        """
+        block = np.atleast_2d(np.asarray(X, np.float32))
+        rows = block.shape[0]
+        cap = self.cfg.max_queue_rows
+        if cap and self._queued_rows + rows > cap:
+            self.stats["shed_requests"] += 1
+            self.stats["shed_rows"] += rows
+            return False
+        dl = self.cfg.deadline_ms if deadline_ms is None else deadline_ms
+        deadline = None if not dl else self._now() + dl / 1e3
+        self._queue.append((deadline, block))
+        self._queued_rows += rows
+        return True
+
+    def drain(self) -> List[Optional[np.ndarray]]:
+        """Score everything admitted since the last drain, one result per
+        `submit` in order.  ``None`` marks a request whose deadline expired
+        while queued (counted in ``deadline_requests``); batches past
+        ``overload_rows`` score on the fallback prefix forest.  Scoring
+        failures count in ``errors`` and re-raise (the queue is already
+        consumed — a retry resubmits)."""
+        queue, self._queue = self._queue, []
+        self._queued_rows = 0
+        if not queue:
+            return []
+        now = self._now()
+        results: List[Optional[np.ndarray]] = [None] * len(queue)
+        live: List[int] = []
+        for i, (deadline, block) in enumerate(queue):
+            if deadline is not None and now > deadline:
+                self.stats["deadline_requests"] += 1
+                self.stats["deadline_rows"] += block.shape[0]
+            else:
+                live.append(i)
+        if not live:
+            return results
+        batch, sizes = self._concat_requests([queue[i][1] for i in live])
+        fallback = (self.cfg.overload_rows
+                    and batch.shape[0] > self.cfg.overload_rows)
+        packed = self._fallback_packed() if fallback else None
+        try:
+            from repro.core.losses import get_loss
+            out = get_loss(self.cfg.loss).transform(
+                self.predict_codes(self._codes(batch), packed=packed))
+        except Exception:
+            self.stats["errors"] += 1
+            raise
+        if fallback:
+            self.stats["fallback_batches"] += 1
+            self.stats["fallback_rows"] += batch.shape[0]
+        self.stats["requests"] += len(live)
+        ofs = 0
+        for i, s in zip(live, sizes):
+            results[i] = np.asarray(out[ofs:ofs + s])
+            ofs += s
+        return results
+
+    def serve(self, requests: Sequence) -> List[Optional[np.ndarray]]:
         """Micro-batch a list of row-block requests through ONE forest pass.
 
         Requests are (rows_i, m) feature blocks; they are concatenated,
         scored as a single padded batch, and split back per request —
-        the GBDT analogue of continuous batching.
+        the GBDT analogue of continuous batching.  With admission knobs
+        set, each request goes through `submit`/`drain`: shed or
+        deadline-dropped requests come back as ``None`` in their slot.
         """
         if not requests:
             return []
-        batch, sizes = self._concat_requests(requests)
-        out = self.predict(batch)
-        self.stats["requests"] += len(requests)
-        outs, ofs = [], 0
-        for s in sizes:
-            outs.append(np.asarray(out[ofs:ofs + s]))
-            ofs += s
-        return outs
+        cfg = self.cfg
+        if not (cfg.max_queue_rows or cfg.deadline_ms or cfg.overload_rows):
+            batch, sizes = self._concat_requests(requests)
+            out = self.predict(batch)
+            self.stats["requests"] += len(requests)
+            outs, ofs = [], 0
+            for s in sizes:
+                outs.append(np.asarray(out[ofs:ofs + s]))
+                ofs += s
+            return outs
+        admitted = [i for i, r in enumerate(requests) if self.submit(r)]
+        drained = self.drain()
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        for i, out in zip(admitted, drained):
+            results[i] = out
+        return results
 
     # -- explanation serving -------------------------------------------------
     def explain(self, X, *, algorithm: str = "path_dependent",
@@ -236,109 +381,3 @@ class ForestServer:
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a compile-cache warmup pass)."""
         self.stats = dict(self._ZERO_STATS)
-
-
-# ---------------------------------------------------------------------------
-# LM decode serving (the dry-run world's inference driver).
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    max_seq_len: int = 2048
-    temperature: float = 0.0           # 0 = greedy
-    eos_id: int = 1
-
-
-def make_serve_step(cfg: ModelConfig, scfg: ServeConfig,
-                    mesh: Optional[Mesh] = None) -> Callable:
-    """``serve_step(params, cache, token, key) -> (next_token, cache)``."""
-    ctx = make_axis_ctx(mesh, cfg)
-
-    def serve_step(params, cache, token, key):
-        logits, cache = lm.decode_step(params, cfg, cache, token, ctx)
-        mask = lm.vocab_mask(cfg)
-        if mask is not None:
-            logits = logits + mask
-        if scfg.temperature > 0:
-            nxt = jax.random.categorical(key, logits / scfg.temperature,
-                                         axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32), cache
-
-    return serve_step
-
-
-def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
-    ctx = make_axis_ctx(mesh, cfg)
-
-    def prefill_step(params, batch):
-        return lm.prefill(params, cfg, batch, ctx)
-
-    return prefill_step
-
-
-class BatchedServer:
-    """Minimal continuous-batching loop over a fixed device batch.
-
-    Requests queue up; every free slot is filled with the next request's
-    prompt (teacher-forced through decode steps — the simple slot-refill
-    pattern; a production server would use a separate prefill engine).
-    Finished sequences (EOS or max_new_tokens) free their slot.
-    """
-
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 batch_size: int, mesh: Optional[Mesh] = None, seed: int = 0):
-        self.cfg, self.scfg, self.params = cfg, scfg, params
-        self.batch = batch_size
-        self.step_fn = jax.jit(make_serve_step(cfg, scfg, mesh))
-        self.key = jax.random.key(seed)
-
-    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32
-                 ) -> List[List[int]]:
-        out: List[List[int]] = [[] for _ in prompts]
-        queue = list(range(len(prompts)))
-        slots: List[Optional[int]] = [None] * self.batch
-        pending: Dict[int, List[int]] = {}      # slot -> prompt tokens left
-        produced = [0] * len(prompts)
-        cache = lm.init_cache(self.cfg, self.batch, self.scfg.max_seq_len)
-        token = jnp.zeros((self.batch,), jnp.int32)
-
-        def refill():
-            for s in range(self.batch):
-                if slots[s] is None and queue:
-                    rid = queue.pop(0)
-                    slots[s] = rid
-                    pending[s] = list(prompts[rid])
-
-        refill()
-        # NOTE: shared cache across slots means fresh slots see stale state in
-        # this minimal sim; a production server keeps per-slot caches /
-        # paged KV.  Fine for driver/e2e purposes.
-        while any(s is not None for s in slots):
-            tok_host = token.tolist() if hasattr(token, "tolist") else token
-            feed = []
-            for s in range(self.batch):
-                if slots[s] is None:
-                    feed.append(0)
-                elif pending.get(s):
-                    feed.append(pending[s].pop(0))
-                else:
-                    feed.append(int(tok_host[s]))
-            self.key, sub = jax.random.split(self.key)
-            token, cache = self.step_fn(self.params, cache,
-                                        jnp.asarray(feed, jnp.int32), sub)
-            tok_host = token.tolist()
-            for s in range(self.batch):
-                rid = slots[s]
-                if rid is None or pending.get(s):
-                    continue
-                t = int(tok_host[s])
-                out[rid].append(t)
-                produced[rid] += 1
-                if t == self.scfg.eos_id or produced[rid] >= max_new_tokens:
-                    slots[s] = None
-                    pending.pop(s, None)
-            refill()
-        return out

@@ -1,0 +1,507 @@
+"""Fault tolerance: resumable checkpointed training, non-finite guards,
+elastic distributed restart, serving admission control, checkpoint atomicity.
+
+The determinism contract under test (docs/robustness.md):
+
+* kill-at-round-k + resume is BIT-identical to the uninterrupted fixed-seed
+  run — same mesh, every sketch method, both growth modes, both loops;
+* elastic restart (checkpoint from a big mesh, resume on a survivor mesh)
+  follows the repo's distributed-parity contract: split structure bitwise,
+  leaf values allclose (fp32 psum reassociation differs across shard
+  counts — see tests/test_distributed_parity.py);
+* chaos injections (`runtime.chaos`) are host-side and round-addressed, so
+  every failing case replays identically.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import forest as FO
+from repro.core import guards as GU
+from repro.core.boosting import (GBDTConfig, SketchBoost, validate_features,
+                                 validate_targets)
+from repro.core.quantize import MISSING_BIN, apply_quantizer, fit_quantizer
+from repro.data.pipeline import make_tabular
+from repro.io.checkpoint import (CheckpointManager, load_boost_checkpoint,
+                                 save_forest_checkpoint)
+from repro.runtime.chaos import (ChaosKill, DelayShard, HostLost, KillAtRound,
+                                 DropHost, NaNAtRow, VirtualClock,
+                                 nan_at_rows)
+
+N, M, D, BINS = 160, 6, 4, 16
+SKETCHES = ["none", "top_outputs", "random_sampling", "random_projection",
+            "truncated_svd"]
+
+
+def _cfg(**kw):
+    base = dict(loss="multiclass", n_trees=7, depth=3, n_bins=BINS,
+                learning_rate=0.3, sketch_k=2, use_kernel=False,
+                scan_chunk=3, seed=7)
+    base.update(kw)
+    return GBDTConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y = make_tabular("multiclass", N, M, D, seed=1)
+    Xv, yv = make_tabular("multiclass", 64, M, D, seed=2)
+    return X, y, Xv, yv
+
+
+def _fit(cfg, data, chaos=None):
+    X, y, Xv, yv = data
+    return SketchBoost(cfg).fit(X, y, eval_set=(Xv, yv), chaos=chaos)
+
+
+def _assert_models_bitwise(a, b):
+    for x, z in zip(jax.tree.leaves(a.packed), jax.tree.leaves(b.packed)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+    # history matches modulo wall-clock timing fields
+    strip = lambda h: [{k: v for k, v in r.items() if not k.endswith("_s")}
+                       for r in h]
+    assert strip(a.history) == strip(b.history)
+    assert a.best_round == b.best_round
+
+
+# ---------------------------------------------------------------------------
+# Kill-at-round-k + resume == uninterrupted run, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sketch", SKETCHES)
+def test_kill_resume_bit_identical_per_sketch(tmp_path, data, sketch):
+    cfg = _cfg(sketch_method=sketch)
+    ref = _fit(cfg, data)
+
+    ck = dataclasses.replace(cfg, save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(ChaosKill):
+        _fit(ck, data, chaos=KillAtRound(4))
+    assert CheckpointManager(str(tmp_path)).latest_step() == 4
+
+    resumed = _fit(dataclasses.replace(ck, resume_from=str(tmp_path)), data)
+    _assert_models_bitwise(resumed, ref)
+
+
+@pytest.mark.parametrize("loop", ["scan", "python"])
+@pytest.mark.parametrize("growth", ["levelwise", "leafwise"])
+def test_kill_resume_bit_identical_growth_x_loop(tmp_path, data, loop,
+                                                 growth):
+    kw = dict(sketch_method="random_projection", loop=loop, growth=growth)
+    if growth == "leafwise":
+        kw["max_leaves"] = 6
+    cfg = _cfg(**kw)
+    ref = _fit(cfg, data)
+
+    ck = dataclasses.replace(cfg, save_every=3, ckpt_dir=str(tmp_path))
+    with pytest.raises(ChaosKill):
+        _fit(ck, data, chaos=KillAtRound(3))
+
+    resumed = _fit(dataclasses.replace(ck, resume_from=str(tmp_path)), data)
+    _assert_models_bitwise(resumed, ref)
+
+
+def test_kill_fires_once_so_rerun_with_same_object_passes(tmp_path, data):
+    """The kill-then-resume shape in one process: the same KillAtRound
+    object sails past its trigger on the resumed run."""
+    cfg = _cfg(save_every=2, ckpt_dir=str(tmp_path))
+    kill = KillAtRound(4)
+    with pytest.raises(ChaosKill):
+        _fit(cfg, data, chaos=kill)
+    assert kill.fired
+    resumed = _fit(dataclasses.replace(cfg, resume_from=str(tmp_path)),
+                   data, chaos=kill)
+    assert resumed.packed.n_rounds == cfg.n_trees
+
+
+def test_resume_under_different_config_refused(tmp_path, data):
+    cfg = _cfg(save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(ChaosKill):
+        _fit(cfg, data, chaos=KillAtRound(2))
+    bad = dataclasses.replace(cfg, resume_from=str(tmp_path),
+                              learning_rate=0.123)
+    with pytest.raises(ValueError, match="learning_rate"):
+        _fit(bad, data)
+
+
+def test_resume_from_serving_only_checkpoint_refused(tmp_path, data):
+    model = _fit(_cfg(), data)
+    save_forest_checkpoint(str(tmp_path), model.packed, model.quantizer,
+                           metadata={"loss": "multiclass"})
+    with pytest.raises(ValueError, match="serving-only"):
+        _fit(_cfg(resume_from=str(tmp_path)), data)
+
+
+def test_resume_eval_set_must_match_checkpoint(tmp_path, data):
+    X, y, Xv, yv = data
+    cfg = _cfg(save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(ChaosKill):
+        _fit(cfg, data, chaos=KillAtRound(2))
+    rs = dataclasses.replace(cfg, resume_from=str(tmp_path))
+    with pytest.raises(ValueError, match="eval"):
+        SketchBoost(rs).fit(X, y)                   # checkpoint has Fv
+    with pytest.raises(ValueError, match="eval"):
+        SketchBoost(rs).fit(X, y, eval_set=(Xv[:32], yv[:32]))
+
+
+def test_checkpoint_doubles_as_serving_checkpoint(tmp_path, data):
+    """Every v4 training step is a complete serving checkpoint: the packed
+    prefix scores, and `best_iteration` rides along in the metadata."""
+    from repro.training.serve_lib import ForestServer
+    X = data[0]
+    cfg = _cfg(save_every=2, ckpt_dir=str(tmp_path))
+    model = _fit(cfg, data)
+    server = ForestServer.from_checkpoint(str(tmp_path), use_kernel=False)
+    assert server.quantizer is not None
+    out = np.asarray(server.predict(X[:16]))
+    assert out.shape == (16, D) and np.isfinite(out).all()
+    st = load_boost_checkpoint(str(tmp_path))
+    # saves land on save_every boundaries only: the last one is round 6
+    assert st.round == 6
+    assert st.packed.n_rounds == 6
+    del model
+
+
+# ---------------------------------------------------------------------------
+# Non-finite guards (NaN injection per policy)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_data():
+    X, y = make_tabular("multitask_mse", N, M, D, seed=3)
+    return X, np.asarray(y, np.float32)
+
+
+def _fit_dense(policy, dense_data, chaos=None, **kw):
+    X, y = dense_data
+    cfg = GBDTConfig(loss="multitask_mse", n_trees=6, depth=3, n_bins=BINS,
+                     use_kernel=False, scan_chunk=3, seed=5,
+                     guard_policy=policy, **kw)
+    return SketchBoost(cfg).fit(X, y, chaos=chaos)
+
+
+def test_guard_off_lets_nan_poison_scores(dense_data):
+    """Documents the failure mode the guards exist for."""
+    model = _fit_dense("off", dense_data, chaos=NaNAtRow(2, rows=[0, 1]))
+    assert not np.isfinite(np.asarray(model.predict(dense_data[0]))).all()
+
+
+@pytest.mark.parametrize("loop", ["scan", "python"])
+def test_guard_raise_detects_at_round_boundary(dense_data, loop):
+    with pytest.raises(GU.NonFiniteError):
+        _fit_dense("raise", dense_data, chaos=NaNAtRow(2, rows=[0, 1]),
+                   loop=loop)
+
+
+@pytest.mark.parametrize("policy", ["skip_round", "clip"])
+def test_guard_policies_keep_training_finite(dense_data, policy):
+    model = _fit_dense(policy, dense_data, chaos=NaNAtRow(2, rows=[0, 1]))
+    pred = np.asarray(model.predict(dense_data[0]))
+    assert np.isfinite(pred).all()
+    assert model.packed.n_rounds == 6
+
+
+def test_guard_skip_round_zeroes_poisoned_rounds(dense_data):
+    """Rounds before the injection are untouched; every poisoned round's
+    trees contribute exactly nothing."""
+    clean = _fit_dense("skip_round", dense_data)
+    hit = _fit_dense("skip_round", dense_data, chaos=NaNAtRow(3, rows=[0]))
+    t = 3 * hit.packed.trees_per_round
+    np.testing.assert_array_equal(np.asarray(hit.packed.leaf[:t]),
+                                  np.asarray(clean.packed.leaf[:t]))
+    assert np.all(np.asarray(hit.packed.leaf[t:]) == 0.0)
+
+
+def test_hessian_floor_survives_degenerate_hessians(dense_data):
+    model = _fit_dense("off", dense_data, hessian_floor=1e-3, lambda_l2=0.0)
+    assert np.isfinite(np.asarray(model.predict(dense_data[0]))).all()
+
+
+def test_guard_policy_validated():
+    with pytest.raises(ValueError, match="guard_policy"):
+        GBDTConfig(guard_policy="panic").validate()
+
+
+# ---------------------------------------------------------------------------
+# NaN-aware binning / missing-bin routing
+# ---------------------------------------------------------------------------
+
+def test_nan_features_route_to_missing_bin(data):
+    X = nan_at_rows(data[0], rows=range(0, N, 3), cols=[1])
+    q = fit_quantizer(X, BINS)
+    codes = np.asarray(apply_quantizer(q, jnp.asarray(X)))
+    assert np.all(codes[::3, 1] == MISSING_BIN)
+    assert np.all(codes[1::3, 1] != MISSING_BIN)
+
+
+def test_fit_predict_with_missing_values(data):
+    """NaN is a first-class value end-to-end: training learns from rows
+    with missing features and predictions stay finite."""
+    X, y = nan_at_rows(data[0], rows=range(0, N, 4), cols=[0, 2]), data[1]
+    model = SketchBoost(_cfg()).fit(X, y)
+    pred = np.asarray(model.predict(X))
+    assert np.isfinite(pred).all()
+
+
+def test_all_nan_column_is_never_split_on(data):
+    X = np.array(data[0], copy=True)
+    X[:, 5] = np.nan
+    model = SketchBoost(_cfg()).fit(X, data[1])
+    feats = np.asarray(model.packed.feat)
+    leaves = np.asarray(model.packed.left) == np.arange(
+        feats.shape[1])[None, :]
+    assert not np.any(feats[~leaves] == 5)
+    assert np.isfinite(np.asarray(model.predict(X))).all()
+
+
+# ---------------------------------------------------------------------------
+# Input validation names the offending axis
+# ---------------------------------------------------------------------------
+
+def test_validate_features_rejects_inf_naming_columns():
+    X = np.zeros((4, 3), np.float32)
+    X[2, 1] = np.inf
+    with pytest.raises(ValueError, match=r"\[1\]"):
+        validate_features(X)
+
+
+def test_validate_features_feature_count_mismatch(data):
+    model = SketchBoost(_cfg()).fit(data[0], data[1])
+    with pytest.raises(ValueError, match=f"fit with {M}"):
+        model.predict(data[0][:, :M - 1])
+
+
+def test_validate_targets_misalignment_and_nonfinite():
+    with pytest.raises(ValueError, match="row-aligned"):
+        validate_targets(np.zeros(5), loss="multiclass", n_rows=6)
+    y = np.zeros((4, 2), np.float32)
+    y[1, 0] = np.nan
+    with pytest.raises(ValueError, match=r"\(1, 0\)"):
+        validate_targets(y, loss="multitask_mse")
+    with pytest.raises(ValueError, match="non-integer"):
+        validate_targets(np.asarray([0.0, 1.5]), loss="multiclass")
+
+
+def test_predict_before_fit_raises():
+    with pytest.raises(ValueError, match="not fitted"):
+        SketchBoost(_cfg()).predict(np.zeros((2, M), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Distributed: same-mesh resume is bitwise; elastic restart follows the
+# parity contract (structure bitwise, values allclose)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dist_data():
+    X, y = make_tabular("multiclass", N, M, D, seed=4)
+    q = fit_quantizer(X, BINS)
+    return apply_quantizer(q, jnp.asarray(X)), jnp.asarray(y)
+
+
+def _dist_cfg(**kw):
+    base = dict(loss="multiclass", n_outputs=D, n_trees=6, depth=3,
+                n_bins=BINS, learning_rate=0.3, use_kernel=False, seed=9)
+    base.update(kw)
+    return GBDTConfig(**base)
+
+
+def test_distributed_kill_resume_bitwise_same_mesh(tmp_path, dist_data):
+    from repro.core import distributed as GD
+    from repro.launch.mesh import make_mesh
+    codes, Y = dist_data
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cfg = _dist_cfg()
+    F_ref, forest_ref, _ = GD.fit_distributed(cfg, mesh, codes, Y)
+
+    ck = dataclasses.replace(cfg, save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(HostLost):
+        GD.fit_distributed(ck, mesh, codes, Y, chaos=DropHost(3, host=1))
+    F, forest, _ = GD.fit_distributed(
+        dataclasses.replace(ck, resume_from=str(tmp_path)), mesh, codes, Y)
+    np.testing.assert_array_equal(np.asarray(F), np.asarray(F_ref))
+    for a, b in zip(jax.tree.leaves(forest), jax.tree.leaves(forest_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restart_onto_survivor_mesh(tmp_path, dist_data):
+    """Host loss on the 8-device mesh -> resume the checkpoint on a 4-device
+    survivor mesh.  Cross-mesh fp32 psum reassociation can flip near-tie
+    splits in post-resume rounds, so the contract is NOT bitwise equality
+    with a from-scratch small-mesh fit; it is (1) the checkpointed prefix
+    rounds survive verbatim, (2) the elastic resume itself is deterministic
+    (two replays are bitwise identical), and (3) the resulting model matches
+    the from-scratch fit's quality."""
+    from repro.core import distributed as GD
+    from repro.core.losses import get_loss
+    from repro.launch.mesh import make_mesh
+    codes, Y = dist_data
+    big = make_mesh((4, 2), ("data", "model"))
+    small = make_mesh((2, 2), ("data", "model"))
+    cfg = _dist_cfg(sketch_method="top_outputs", sketch_k=2)
+
+    ck = dataclasses.replace(cfg, save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(HostLost):
+        GD.fit_distributed(ck, big, codes, Y, chaos=DropHost(4))
+    st = load_boost_checkpoint(str(tmp_path))
+    assert st.round == 4
+    rs = dataclasses.replace(ck, resume_from=str(tmp_path))
+    F_el, forest_el, _ = GD.fit_distributed(rs, small, codes, Y)
+    assert forest_el.feat.shape[0] == cfg.n_trees
+
+    # (1) prefix rounds are the checkpoint, verbatim
+    for a, b in zip(jax.tree.leaves(forest_el), jax.tree.leaves(st.trees)):
+        np.testing.assert_array_equal(np.asarray(a)[:st.round],
+                                      np.asarray(b))
+    # (2) the elastic resume replays bitwise
+    F_el2, forest_el2, _ = GD.fit_distributed(rs, small, codes, Y)
+    np.testing.assert_array_equal(np.asarray(F_el), np.asarray(F_el2))
+    for a, b in zip(jax.tree.leaves(forest_el), jax.tree.leaves(forest_el2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # (3) quality matches the from-scratch survivor-mesh fit
+    F_ref, _, _ = GD.fit_distributed(cfg, small, codes, Y)
+    loss = get_loss(cfg.loss)
+    l_el = float(loss.value(jnp.asarray(F_el), Y))
+    l_ref = float(loss.value(jnp.asarray(F_ref), Y))
+    assert abs(l_el - l_ref) < 0.05 * max(abs(l_ref), 1e-6), (l_el, l_ref)
+
+
+def test_distributed_guard_skip_round_stays_in_sync(dist_data):
+    """Every shard must take the same skip decision (the flag is pmax-ed
+    over the mesh) — the fit completes finite with poisoned dense targets."""
+    from repro.core import distributed as GD
+    from repro.launch.mesh import make_mesh
+    codes, _ = dist_data
+    rng = np.random.default_rng(6)
+    Y = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cfg = _dist_cfg(loss="multitask_mse", guard_policy="skip_round")
+    F, forest, _ = GD.fit_distributed(cfg, mesh, codes, Y,
+                                      chaos=NaNAtRow(2, rows=[0, 7]))
+    assert np.isfinite(np.asarray(F)).all()
+    assert np.all(np.asarray(forest.value)[2:] == 0.0)
+
+
+def test_distributed_delay_feeds_watchdog(dist_data):
+    from repro.core import distributed as GD
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.fault import StragglerWatchdog
+    codes, Y = dist_data
+    mesh = make_mesh((4, 2), ("data", "model"))
+    wd = StragglerWatchdog(window=16, threshold=2.0)
+    GD.fit_distributed(_dist_cfg(n_trees=12), mesh, codes, Y,
+                       chaos=DelayShard(10, 60.0), watchdog=wd)
+    assert wd.flagged >= 1
+
+
+# ---------------------------------------------------------------------------
+# Serving admission control (virtual clock; no sleeping)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    X, y = make_tabular("multiclass", 300, M, D, seed=8)
+    model = SketchBoost(_cfg(n_trees=8)).fit(X, y)
+    return model, X
+
+
+def _server(model, clock, **knobs):
+    from repro.training.serve_lib import ForestServeConfig, ForestServer
+    cfg = ForestServeConfig(loss="multiclass", use_kernel=False, **knobs)
+    return ForestServer(model.packed, model.quantizer, cfg, clock=clock)
+
+
+def test_deadline_drops_only_expired_requests(served):
+    model, X = served
+    clk = VirtualClock()
+    srv = _server(model, clk, deadline_ms=100.0)
+    srv.submit(X[:4], deadline_ms=50.0)
+    srv.submit(X[4:8])                      # default 100ms deadline
+    clk.advance(0.07)                       # 70ms: first dead, second alive
+    res = srv.drain()
+    assert res[0] is None and res[1].shape == (4, D)
+    assert srv.stats["deadline_requests"] == 1
+    assert srv.stats["deadline_rows"] == 4
+
+
+def test_overload_falls_back_to_sliced_forest(served):
+    model, X = served
+    srv = _server(model, VirtualClock(), overload_rows=8, best_iteration=8)
+    for ofs in range(0, 16, 4):
+        assert srv.submit(X[ofs:ofs + 4])
+    res = srv.drain()
+    assert all(r is not None for r in res)
+    assert srv.stats["fallback_batches"] == 1
+    assert srv.stats["fallback_rows"] == 16
+    # fallback = first best_iteration // 2 rounds, exactly
+    sliced = FO.slice_rounds(model.packed, 4)
+    full = np.asarray(srv._fallback_packed().leaf)
+    np.testing.assert_array_equal(full, np.asarray(sliced.leaf))
+    # small batches still score on the full forest
+    srv.submit(X[:4])
+    out = srv.drain()[0]
+    np.testing.assert_allclose(out, np.asarray(srv.predict(X[:4])),
+                               rtol=1e-6)
+
+
+def test_admission_off_is_legacy_behavior(served):
+    model, X = served
+    srv = _server(model, VirtualClock())
+    outs = srv.serve([X[:3], X[3:9]])
+    assert [o.shape[0] for o in outs] == [3, 6]
+    assert srv.stats["shed_requests"] == 0
+    assert srv.stats["fallback_batches"] == 0
+
+
+def test_serving_validates_request_features(served):
+    model, X = served
+    srv = _server(model, VirtualClock())
+    with pytest.raises(ValueError, match="request X"):
+        srv.predict(X[:4, :M - 1])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint atomicity: crashes mid-save never cost the newest valid step
+# ---------------------------------------------------------------------------
+
+def _valid_steps(root):
+    return CheckpointManager(str(root), async_save=False).all_steps()
+
+
+def test_manifestless_corpse_is_garbage_not_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, {"w": jnp.arange(4)})
+    # simulate a crash mid-save: state written, manifest never committed
+    corpse = os.path.join(str(tmp_path), "step_9")
+    os.makedirs(corpse)
+    with open(os.path.join(corpse, "state.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    assert mgr.latest_step() == 3
+    state, step = mgr.restore({"w": jnp.zeros(4, jnp.int32)})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.arange(4))
+
+
+def test_keep_n_counts_only_valid_steps(tmp_path):
+    """gc prunes by VALID steps: a younger manifest-less corpse neither
+    survives nor causes the newest valid checkpoint to be deleted."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    mgr.save(1, {"w": jnp.arange(4)})
+    corpse = os.path.join(str(tmp_path), "step_5")
+    os.makedirs(corpse)
+    open(os.path.join(corpse, "state.npz"), "wb").close()
+    mgr.save(6, {"w": jnp.arange(4)})
+    assert _valid_steps(tmp_path) == [1, 6]
+    assert not os.path.exists(corpse)
+
+
+def test_stale_tmp_dirs_swept_on_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    stale = os.path.join(str(tmp_path), ".tmp_step_3_deadbeef")
+    os.makedirs(stale)
+    mgr.save(4, {"w": jnp.arange(4)})
+    assert not os.path.exists(stale)
+    assert mgr.latest_step() == 4

@@ -385,7 +385,7 @@ def test_sparse_checkpoint_roundtrip(tmp_path):
     save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
                            metadata={"loss": "multiclass"})
     pf, q, meta = load_forest_checkpoint(str(tmp_path))
-    assert meta["format_version"] == 3 and meta["depth"] == m.packed.depth
+    assert meta["format_version"] == 4 and meta["depth"] == m.packed.depth
     for a, b in zip(pf, m.packed):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     codes = m._bin(X)

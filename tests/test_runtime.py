@@ -231,17 +231,89 @@ def test_lm_batches_stub_embeddings():
 
 
 # ---------------------------------------------------------------------------
+# RestartableLoop on a real GBDT fit (the rewired fault-tolerance driver)
+# ---------------------------------------------------------------------------
+
+def _gbdt_fixture(seed=0):
+    from repro.core.quantize import quantize_uniform
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(128, 6)).astype(np.float32))
+    Y = jnp.asarray(rng.integers(0, 4, size=128), jnp.int32)
+    return quantize_uniform(X, 16), Y
+
+
+def test_restartable_loop_drives_gbdt_fit(tmp_path):
+    """`fit_distributed` runs its round loop through RestartableLoop: a
+    chaos kill mid-run leaves a round-boundary checkpoint, and resuming on
+    the same mesh reproduces the uninterrupted run bit-for-bit."""
+    import dataclasses
+    from repro.core import distributed as GD
+    from repro.core.boosting import GBDTConfig
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.chaos import ChaosKill, KillAtRound
+
+    codes, Y = _gbdt_fixture()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = GBDTConfig(loss="multiclass", n_outputs=4, n_trees=5, depth=3,
+                     n_bins=16, use_kernel=False, seed=3)
+    F_ref, forest_ref, _ = GD.fit_distributed(cfg, mesh, codes, Y)
+
+    ck = dataclasses.replace(cfg, save_every=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(ChaosKill):
+        GD.fit_distributed(ck, mesh, codes, Y, chaos=KillAtRound(3))
+    assert CheckpointManager(str(tmp_path)).latest_step() == 2
+
+    rs = dataclasses.replace(ck, resume_from=str(tmp_path))
+    F, forest, _ = GD.fit_distributed(rs, mesh, codes, Y)
+    np.testing.assert_array_equal(np.asarray(F), np.asarray(F_ref))
+    for a, b in zip(jax.tree.leaves(forest), jax.tree.leaves(forest_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restartable_loop_virtual_delay_feeds_watchdog(tmp_path):
+    """`DelayShard` adds virtual seconds to the watchdog's observations —
+    deterministic straggler detection without sleeping."""
+    from repro.runtime.chaos import DelayShard
+
+    def step_fn(state, batch):
+        return state + 1, {}
+
+    wd = StragglerWatchdog(window=16, threshold=2.0)
+    loop = RestartableLoop("", step_fn, save_every=0, chaos=DelayShard(10, 60.0),
+                           watchdog=wd)
+    _, n = loop.run(0, None, 12)
+    assert n == 12
+    assert wd.flagged >= 1          # the +60s virtual step is an outlier
+
+
+# ---------------------------------------------------------------------------
 # Serving
 # ---------------------------------------------------------------------------
 
-def test_batched_server_generates():
-    from repro.configs import smoke_config
-    from repro.models import lm
-    from repro.training.serve_lib import BatchedServer, ServeConfig
-    cfg = smoke_config("gemma-7b")
-    params = lm.init(cfg, jax.random.key(0))
-    server = BatchedServer(cfg, ServeConfig(max_seq_len=64), params,
-                           batch_size=2)
-    outs = server.generate([[5, 6, 7], [8, 9]], max_new_tokens=4)
-    assert len(outs) == 2
-    assert all(1 <= len(o) <= 4 for o in outs)
+def test_forest_server_admission_alignment():
+    """With admission knobs on, `serve` returns one slot per request —
+    shed requests come back as None, the rest keep their positions."""
+    from repro.core.boosting import GBDTConfig, SketchBoost
+    from repro.data.pipeline import make_tabular
+    from repro.runtime.chaos import VirtualClock
+    from repro.training.serve_lib import ForestServeConfig, ForestServer
+
+    X, y = make_tabular("multiclass", 200, 6, 4, seed=0)
+    model = SketchBoost(GBDTConfig(loss="multiclass", n_trees=4, depth=3,
+                                   n_bins=16, use_kernel=False)).fit(X, y)
+    server = ForestServer(model.packed, model.quantizer,
+                          ForestServeConfig(loss="multiclass",
+                                            use_kernel=False,
+                                            max_queue_rows=8),
+                          clock=VirtualClock())
+    res = server.serve([X[:4], X[4:10], X[10:14]])   # middle one sheds: 4+6>8
+    assert res[1] is None
+    assert res[0].shape == (4, 4) and res[2].shape == (4, 4)
+    assert server.stats["shed_requests"] == 1
+    assert server.stats["shed_rows"] == 6
+    # knobs off -> exact legacy behavior, no Nones
+    plain = ForestServer(model.packed, model.quantizer,
+                         ForestServeConfig(loss="multiclass",
+                                           use_kernel=False))
+    outs = plain.serve([X[:4], X[4:10]])
+    assert [o.shape[0] for o in outs] == [4, 6]
