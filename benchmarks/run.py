@@ -13,6 +13,7 @@ vs one-vs-all, time vs d) are the reproduction targets.
   hist     histogram-engine microbench: direct vs partitioned vs sibling
            subtraction per tree depth                     (-> BENCH_hist.json)
   predict  packed-forest inference baseline               (-> BENCH_predict.json)
+  serve    serving tier: compression x quantization matrix (-> BENCH_serve.json)
   shap     TreeSHAP explanation-serving baseline          (-> BENCH_shap.json)
   kernels  Pallas kernel vs jnp oracle timings (CPU interpret; structural)
   compression  sketched vs exact DP all-reduce bytes      (beyond-paper)
@@ -757,10 +758,164 @@ def bench_compression() -> List[Dict]:
     return rows
 
 
+SERVE_QUICK = dict(n=6000, m=24, d=6, trees=60, depth=6, bins=64,
+                   n_bulk=20000, interactive=(1, 8, 64), n_requests=48,
+                   prune_pct=60)
+SERVE_FULL = dict(n=30000, m=48, d=10, trees=200, depth=6, bins=256,
+                  n_bulk=100000, interactive=(1, 8, 64, 512), n_requests=96,
+                  prune_pct=60)
+SERVE_SMOKE = dict(n=800, m=10, d=4, trees=12, depth=4, bins=32,
+                   n_bulk=4000, interactive=(1, 8, 32), n_requests=24,
+                   prune_pct=50)
+
+
+def bench_serve(scale) -> List[Dict]:
+    """Serving-tier baseline: compression x quantization latency matrix.
+
+    Trains ONE multiclass model, checkpoints it, then serves it through
+    `training.serve_lib.ForestServer` at the four corners of the
+    compression matrix — {fp32, int8-quantized} x {full, pruned+compacted}
+    — over two request mixes:
+
+      * ``interactive`` — cycling small batches of raw float features
+        (padded-bucket path, includes binning): per-request p50/p99;
+      * ``bulk``        — one large PRE-BINNED batch through
+        ``predict_codes`` (the double-buffered chunk-stream path):
+        best-of-3 warm rows/s.  Binning is identical across variants and
+        would otherwise wash out the traversal differences the matrix
+        exists to measure.
+
+    The pruning threshold is picked adaptively (a percentile of the
+    model's own positive split gains) so the pruned variants genuinely
+    shrink.  `BENCH_serve.json` at the repo root is the standing baseline;
+    the inline assert pins the tier's reason to exist: the
+    quantized+pruned server must out-serve the fp32 full forest on bulk
+    throughput.
+    """
+    import jax
+    from repro.core import forest as FO
+    from repro.core.boosting import SketchBoost
+    from repro.core.histogram import resolve_kernel_mode
+    from repro.data.pipeline import make_tabular
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+
+    sc = (SERVE_FULL if scale is FULL else
+          SERVE_SMOKE if scale is SMOKE else SERVE_QUICK)
+    mode = resolve_kernel_mode(True)
+    X, y = make_tabular("multiclass", sc["n"], sc["m"], sc["d"], seed=0)
+    cfg = _cfg("multiclass", "random_projection", 2,
+               dict(trees=sc["trees"], depth=sc["depth"], es=0),
+               n_bins=sc["bins"])
+    model = SketchBoost(cfg).fit(X, y)
+    ckpt = os.path.join(RESULTS_DIR, "serve_bench_ckpt")
+    save_forest_checkpoint(ckpt, model.packed, model.quantizer,
+                           metadata={"loss": "multiclass"})
+
+    # Adaptive pruning threshold: walk a percentile ladder of the model's
+    # own positive split gains until the compacted depth genuinely shrinks
+    # — the walk length is depth-bound, so a "pruned" variant that keeps
+    # the full depth would measure nothing.
+    gains = np.asarray(model.packed.gain)
+    pos = gains[gains > 0]
+    depth0 = int(model.packed.depth)
+    for pct in (sc["prune_pct"], 70, 80, 90, 95, 99):
+        alpha = float(np.percentile(pos, pct))
+        d = int(FO.compact_forest(FO.prune_forest(model.packed,
+                                                  alpha)).depth)
+        if d < depth0:
+            break
+    print(f"  serve prune_alpha={alpha:.4g} (p{pct} of positive gains, "
+          f"depth {depth0} -> {d})", flush=True)
+
+    rng = np.random.default_rng(1)
+    X_bulk = X[rng.integers(0, sc["n"], size=sc["n_bulk"])]
+    codes_bulk = np.asarray(model._bin(X_bulk))    # binned once, untimed
+    inter = [X[rng.integers(0, sc["n"], size=sc["interactive"][
+        i % len(sc["interactive"])])]
+        for i in range(sc["n_requests"])]
+
+    variants = [
+        ("fp32_full", {}),
+        ("fp32_pruned", {"prune_alpha": alpha}),
+        ("int8_full", {"quantize": "int8"}),
+        ("int8_pruned", {"quantize": "int8", "prune_alpha": alpha}),
+    ]
+    rows: List[Dict] = []
+    bulk_rate: Dict[str, float] = {}
+    for name, over in variants:
+        server = ForestServer.from_checkpoint(
+            ckpt, max_batch=4096, row_chunk=min(4000, sc["n_bulk"]),
+            double_buffer=True, **over)
+        comp = server.compression
+
+        # interactive mix: warm every bucket, then per-request latency
+        for r in inter[:len(sc["interactive"])]:
+            server.predict_raw(r)
+        lat = []
+        for r in inter:
+            t0 = time.perf_counter()
+            jax.block_until_ready(server.predict_raw(r))
+            lat.append((time.perf_counter() - t0) * 1e3)
+        lat = np.asarray(lat)
+
+        # bulk mix: chunk-streamed double-buffered predict, best-of-3 warm
+        server.predict_codes(codes_bulk)
+        warm = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(server.predict_codes(codes_bulk))
+            warm = min(warm, time.perf_counter() - t0)
+        bulk_rate[name] = sc["n_bulk"] / warm
+        rows.append({
+            "variant": name, "quantize": comp["quantize"],
+            "prune_alpha": (round(comp["prune_alpha"], 6)
+                            if comp["prune_alpha"] is not None else None),
+            "nodes": comp["nodes_after"], "nodes_full": comp["nodes_before"],
+            "depth": comp["depth_after"], "bytes": comp["bytes_after"],
+            "bytes_full": comp["bytes_before"],
+            "p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3),
+            "bulk_rows_per_sec": round(bulk_rate[name]),
+            "bulk_warm_s": round(warm, 4),
+        })
+        print(f"  serve {name}: p50 {rows[-1]['p50_ms']:.2f}ms "
+              f"p99 {rows[-1]['p99_ms']:.2f}ms  "
+              f"bulk {rows[-1]['bulk_rows_per_sec']:,} rows/s  "
+              f"({comp['nodes_after']}/{comp['nodes_before']} nodes, "
+              f"{comp['bytes_after']:,} bytes)", flush=True)
+
+    # The tier's reason to exist: compressed serving must beat the fp32
+    # full forest on bulk throughput.
+    assert bulk_rate["int8_pruned"] > bulk_rate["fp32_full"], (
+        f"quantized+pruned serving ({bulk_rate['int8_pruned']:,.0f} rows/s) "
+        f"does not beat the fp32 full forest "
+        f"({bulk_rate['fp32_full']:,.0f} rows/s)")
+
+    payload = {
+        "bench": "forest_serve",
+        "backend": jax.default_backend(),
+        "kernel_mode": mode,
+        "scale": sc,
+        "prune_alpha": alpha,
+        "speedup_int8_pruned_vs_fp32_full": round(
+            bulk_rate["int8_pruned"] / bulk_rate["fp32_full"], 3),
+        "unix_time": int(time.time()),
+        "rows": rows,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_serve.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[bench:serve] wrote {os.path.join(root, 'BENCH_serve.json')}",
+          flush=True)
+    return rows
+
+
 BENCHES = {
     "gbdt": lambda sc: bench_gbdt(sc),
     "hist": lambda sc: bench_hist(sc),
     "predict": lambda sc: bench_predict(sc),
+    "serve": lambda sc: bench_serve(sc),
     "shap": lambda sc: bench_shap(sc),
     "table1": lambda sc: bench_table1(sc),
     "fig1": lambda sc: bench_fig1(sc),

@@ -1,12 +1,16 @@
-"""End-to-end GBDT serving example: train -> checkpoint -> load -> batched predict.
+"""End-to-end GBDT serving example: two models, one registry, compressed twin.
 
 Walks the full production path on synthetic data:
 
-  1. train a SketchBoost model (sketched split search, compiled scan loop),
-  2. checkpoint its `PackedForest` + quantizer atomically,
-  3. load the checkpoint into a `ForestServer` (a fresh process would do the
-     same — nothing but the checkpoint directory crosses the boundary),
-  4. serve micro-batched requests and verify against the in-memory model.
+  1. train TWO SketchBoost models (an Otto-like multiclass and a smaller
+     second task), checkpoint each atomically,
+  2. load both into one `ModelRegistry` — and register the first model a
+     SECOND time as a pruned + int8-quantized variant of the same
+     checkpoint (the compression pipeline runs at load, nothing is
+     retrained or re-saved),
+  3. serve micro-batched requests against every model through the shared
+     LRU bucket cache, verify the fp32 path against the in-memory model,
+  4. compare full-precision vs compressed latency and footprint.
 
   PYTHONPATH=src python examples/serve_gbdt.py
 """
@@ -18,46 +22,96 @@ import numpy as np
 from repro.core.boosting import GBDTConfig, SketchBoost
 from repro.data.pipeline import make_tabular, train_test_split
 from repro.io.checkpoint import save_forest_checkpoint
-from repro.training.serve_lib import ForestServer
+from repro.training.serve_lib import ModelRegistry
+
+
+def _train(name, n, m, d, trees, depth, seed):
+    X, y = make_tabular("multiclass", n, m, d, seed=seed)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, seed=seed)
+    cfg = GBDTConfig(loss="multiclass", sketch_method="random_projection",
+                     sketch_k=3, n_trees=trees, depth=depth,
+                     learning_rate=0.1, early_stopping_rounds=15, seed=seed)
+    t0 = time.perf_counter()
+    model = SketchBoost(cfg).fit(Xtr, ytr, eval_set=(Xte, yte))
+    print(f"[train] {name}: {model.packed.n_trees} trees in "
+          f"{time.perf_counter() - t0:.1f}s, "
+          f"test loss {model.eval_loss(Xte, yte):.4f}")
+    ckpt = tempfile.mkdtemp(prefix=f"repro_gbdt_{name}_")
+    save_forest_checkpoint(ckpt, model.packed, model.quantizer,
+                           metadata={"loss": cfg.loss})
+    return model, Xte, ckpt
+
+
+def _latency(reg, name, requests):
+    for size in {r.shape[0] for r in requests}:        # warm every bucket
+        reg.predict(name, requests[[r.shape[0]
+                                    for r in requests].index(size)])
+    lat = []
+    for r in requests:
+        t0 = time.perf_counter()
+        reg.predict(name, r)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
 
 
 def main():
-    # 1. Train (multiclass, random-projection sketch k=3 — the paper default).
-    X, y = make_tabular("multiclass", 4000, 20, 6, seed=0)
-    Xtr, Xte, ytr, yte = train_test_split(X, y, seed=0)
-    cfg = GBDTConfig(loss="multiclass", sketch_method="random_projection",
-                     sketch_k=3, n_trees=60, depth=5, learning_rate=0.1,
-                     early_stopping_rounds=15)
-    t0 = time.perf_counter()
-    model = SketchBoost(cfg).fit(Xtr, ytr, eval_set=(Xte, yte))
-    print(f"[train] {model.packed.n_trees} trees in "
-          f"{time.perf_counter() - t0:.1f}s, best round {model.best_round}, "
-          f"test loss {model.eval_loss(Xte, yte):.4f}")
+    # 1. Two independent models, two checkpoints.
+    otto, X_otto, ckpt_otto = _train("otto", 4000, 20, 6, trees=60, depth=5,
+                                     seed=0)
+    moa, X_moa, ckpt_moa = _train("moa", 2000, 12, 4, trees=30, depth=4,
+                                  seed=1)
 
-    # 2. Checkpoint the packed forest + quantizer.
-    ckpt = tempfile.mkdtemp(prefix="repro_gbdt_ckpt_")
-    save_forest_checkpoint(ckpt, model.packed, model.quantizer,
-                           metadata={"loss": cfg.loss})
-    print(f"[ckpt]  packed forest -> {ckpt}")
+    # 2. One registry, three servers — "otto_int8" is the SAME checkpoint
+    #    as "otto", compressed at load: pruned (alpha = drop gainless
+    #    splits), slot-compacted, and int8-quantized.  All three share one
+    #    LRU bucket cache, so equal request shapes reuse compiled
+    #    executables across models.
+    reg = ModelRegistry(max_buckets=8)
+    reg.load("otto", ckpt_otto)
+    reg.load("otto_int8", ckpt_otto, prune_alpha=0.0, quantize="int8")
+    reg.load("moa", ckpt_moa)
+    comp = reg.get("otto_int8").compression
+    print(f"[load]  otto_int8 compressed at load: "
+          f"{comp['nodes_before']} -> {comp['nodes_after']} nodes, "
+          f"{comp['bytes_before']:,} -> {comp['bytes_after']:,} bytes "
+          f"(quantize={comp['quantize']})")
 
-    # 3. Load into a server (this is all a serving process needs).
-    server = ForestServer.from_checkpoint(ckpt)
-    print(f"[serve] loaded {server.packed.n_trees} trees, "
-          f"d={server.packed.n_outputs}, kernel mode {server.mode!r}")
+    # 3. Serve micro-batched requests against every model.
+    rng = np.random.default_rng(2)
+    reqs_otto = [X_otto[rng.integers(0, len(X_otto),
+                                     size=rng.integers(1, 64))]
+                 for _ in range(32)]
+    reqs_moa = [X_moa[rng.integers(0, len(X_moa), size=rng.integers(1, 64))]
+                for _ in range(16)]
+    proba = np.concatenate(reg.serve("otto", reqs_otto), axis=0)
+    _ = reg.serve("moa", reqs_moa)
 
-    # 4. Micro-batched requests: variable-size feature blocks, one forest pass.
-    rng = np.random.default_rng(1)
-    requests = [Xte[rng.integers(0, len(Xte), size=rng.integers(1, 64))]
-                for _ in range(32)]
-    outs = server.serve(requests)
-    proba = np.concatenate(outs, axis=0)
-    print(f"[serve] {len(requests)} requests -> {proba.shape[0]} rows, "
-          f"{server.throughput():,.0f} rows/s in-predict")
-
-    # Served probabilities == in-memory model predictions, bit for bit.
-    expect = np.asarray(model.predict(np.concatenate(requests, axis=0)))
+    # fp32 served probabilities == in-memory model, bit for bit.
+    expect = np.asarray(otto.predict(np.concatenate(reqs_otto, axis=0)))
     np.testing.assert_array_equal(proba, expect)
-    print("[check] served outputs match in-memory model exactly")
+    print("[check] fp32 served outputs match the in-memory model exactly")
+
+    # quantized twin: same argmax decisions on this batch, smaller forest.
+    p_q = np.concatenate(reg.serve("otto_int8", reqs_otto), axis=0)
+    agree = float((p_q.argmax(1) == expect.argmax(1)).mean())
+    print(f"[check] int8+pruned twin agrees with fp32 argmax on "
+          f"{agree:.1%} of rows")
+
+    # 4. Latency comparison on a fixed replay of single-row + 32-row mixes.
+    replay = [X_otto[rng.integers(0, len(X_otto), size=s)]
+              for s in (1, 32) * 20]
+    p50_f, p99_f = _latency(reg, "otto", replay)
+    p50_q, p99_q = _latency(reg, "otto_int8", replay)
+    print(f"[lat ]  otto      p50 {p50_f:6.2f}ms  p99 {p99_f:6.2f}ms")
+    print(f"[lat ]  otto_int8 p50 {p50_q:6.2f}ms  p99 {p99_q:6.2f}ms")
+
+    st = reg.stats()["bucket_cache"]
+    print(f"[cache] shared buckets {st['active_buckets']} "
+          f"(hits {st['hits']}, admissions {st['admissions']}, "
+          f"upgrades {st['upgrades']}, evictions {st['evictions']})")
+    groups = {sig: names for sig, names in reg.shared_signatures().items()}
+    print(f"[reg ]  {len(reg)} models, "
+          f"{len(groups)} distinct compile signatures")
 
 
 if __name__ == "__main__":

@@ -348,16 +348,188 @@ def unpack_forest(pf: PackedForest):
     return T.NodeTree(**fields), "single_tree"
 
 
-def slice_rounds(pf: PackedForest, n_rounds: int) -> PackedForest:
+# Fields carrying a leading tree axis — the slicing surface shared by
+# `PackedForest` and `core.quantize.QuantizedForest` (which adds
+# ``leaf_scale``).  ``base``/``lr``/``depth`` are per-forest and excluded.
+_TREE_AXIS_FIELDS = ("feat", "thr", "left", "right", "leaf", "leaf_scale",
+                     "out_col", "cover", "gain", "node_count")
+
+
+def slice_rounds(pf, n_rounds: int, *, tighten_depth: bool = False):
     """First ``n_rounds`` boosting rounds (e.g. ``best_iteration``) — a pure
-    slice of the tree axis, no recomputation."""
+    slice of the tree axis, no recomputation.
+
+    Works on any forest variant (fp32 `PackedForest`, quantized, pruned,
+    compacted): every field with a leading tree axis is sliced — including
+    a quantized forest's ``leaf_scale`` — rather than assuming the dense
+    fp32 field set, so the serving overload fallback
+    (`training.serve_lib.ForestServer`) composes with compression.  The
+    static walk bound ``depth`` is a forest-wide maximum and stays valid
+    for any prefix; ``tighten_depth=True`` recomputes it from the sliced
+    pointers (host-side sweep) — a cheaper walk for shallow prefixes at the
+    cost of a fresh compile shape.
+    """
     t = n_rounds * pf.trees_per_round
+    upd = {k: v[:t] for k, v in pf._asdict().items()
+           if k in _TREE_AXIS_FIELDS and v is not None}
+    out = pf._replace(**upd)
+    if tighten_depth:
+        out = out._replace(depth=max(_pointer_max_depth(out.left, out.right),
+                                     1))
+    return out
+
+
+def prune_forest(pf: PackedForest, alpha: float) -> PackedForest:
+    """Cost-complexity post-pruning over the packed ``gain``/``cover``
+    buffers (host-side array surgery; no retraining, no kernel changes).
+
+    Bottom-up weakest-link collapse, the post-fit analogue of XGBoost's
+    gamma pruning: any internal node whose children are both terminal and
+    whose recorded split gain is ``<= alpha`` becomes a leaf, recursively
+    (collapsing a node can expose its parent).  Node ids iterate in reverse
+    — both producers emit children with larger ids than their parent, so one
+    reverse sweep is a full bottom-up pass.  The collapsed leaf value is the
+    cover-weighted mean of its children's leaves (the value the training
+    objective would have assigned the merged region), computed in float64
+    and cast once to f32; a zero-cover child (heap pass-through routing)
+    recovers the live child's leaf bit-exactly.  Orphaned child slots become
+    inert: zero leaves, self-loops that nothing points at — `compact_forest`
+    removes them.  Rows that never reached a pruned subtree score
+    bit-identically to the unpruned forest (surviving paths are untouched).
+
+    ``alpha = 0.0`` removes only gainless splits (pass-through heap routing
+    and ties); larger alphas trade accuracy for smaller/faster models.
+    """
+    if pf.gain is None or pf.cover is None:
+        raise ValueError(
+            "prune_forest needs the packed gain AND cover tensors; this "
+            "forest was packed/checkpointed without them (format_version "
+            "< 2) — re-checkpoint from a freshly trained model")
+    feat = np.asarray(pf.feat).copy()
+    thr = np.asarray(pf.thr).copy()
+    left = np.asarray(pf.left).copy()
+    right = np.asarray(pf.right).copy()
+    leaf = np.asarray(pf.leaf, np.float64).copy()
+    gain = np.asarray(pf.gain, np.float32).copy()
+    cover = np.asarray(pf.cover, np.float64)
+    n_trees, n = feat.shape
+    for t in range(n_trees):
+        for i in range(n - 1, -1, -1):
+            l, r = left[t, i], right[t, i]
+            if l == i:                                     # already terminal
+                continue
+            if left[t, l] != l or left[t, r] != r:         # child still splits
+                continue
+            if gain[t, i] > alpha:
+                continue
+            cl, cr = cover[t, l], cover[t, r]
+            if cl <= 0.0:                  # pass-through: keep live child
+                v = leaf[t, r]
+            elif cr <= 0.0:
+                v = leaf[t, l]
+            else:
+                v = (cl * leaf[t, l] + cr * leaf[t, r]) / (cl + cr)
+            leaf[t, i] = v
+            leaf[t, l] = 0.0
+            leaf[t, r] = 0.0
+            left[t, i] = right[t, i] = i                   # now terminal
+            feat[t, i] = 0
+            thr[t, i] = 0
+            gain[t, i] = 0.0
     return pf._replace(
-        feat=pf.feat[:t], thr=pf.thr[:t], left=pf.left[:t],
-        right=pf.right[:t], leaf=pf.leaf[:t], out_col=pf.out_col[:t],
-        cover=None if pf.cover is None else pf.cover[:t],
-        gain=None if pf.gain is None else pf.gain[:t],
-        node_count=None if pf.node_count is None else pf.node_count[:t])
+        feat=jnp.asarray(feat, jnp.int32), thr=jnp.asarray(thr, jnp.int32),
+        left=jnp.asarray(left, jnp.int32), right=jnp.asarray(right,
+                                                             jnp.int32),
+        leaf=jnp.asarray(leaf.astype(np.float32)),
+        gain=jnp.asarray(gain, jnp.float32))
+
+
+def _reachable_nodes(left: np.ndarray, right: np.ndarray) -> np.ndarray:
+    """(T, N) bool: node slots reachable from each tree's root (node 0).
+
+    One forward sweep over ascending ids — children always carry larger ids
+    than their parent (both producers), the same invariant
+    `_pointer_max_depth` and `explain.paths` exploit.
+    """
+    n_trees, n = left.shape
+    reach = np.zeros((n_trees, n), bool)
+    if n == 0:
+        return reach
+    reach[:, 0] = True
+    rows = np.arange(n_trees)
+    for i in range(n):
+        internal = reach[:, i] & (left[:, i] != i)
+        r = rows[internal]
+        reach[r, left[internal, i]] = True
+        reach[r, right[internal, i]] = True
+    return reach
+
+
+def compact_forest(pf):
+    """Slot defragmentation: drop unreachable node slots and shrink the node
+    axis — pure renumbering, predictions bit-identical (asserted by tests).
+
+    Pruning (and early-exhausted leaf-wise growth) leaves dead slots below
+    ``node_count``: orphaned subtrees no pointer reaches.  This pass keeps
+    only root-reachable nodes, renumbers them in ascending old-id order
+    (preserving the parent < child invariant every consumer relies on),
+    remaps the pointers, and pads the new node axis to a multiple of 8 with
+    inert self-loop slots.  ``depth`` is recomputed from the surviving
+    pointers, so a depth-limited walk over a heavily pruned forest gets
+    cheaper, not just smaller.  Works on fp32 and quantized forests alike
+    (dtype-preserving gathers).
+    """
+    left = np.asarray(pf.left)
+    right = np.asarray(pf.right)
+    n_trees, n = left.shape
+    reach = _reachable_nodes(left, right)
+    counts = reach.sum(axis=1).astype(np.int32)            # (T,)
+    k_max = int(counts.max()) if n_trees else 0
+    n_new = max(k_max + (-k_max) % 8, 8)
+
+    def blank_like(x, extra=()):
+        return np.zeros((n_trees, n_new) + tuple(extra), np.asarray(x).dtype)
+
+    feat_n = blank_like(pf.feat)
+    thr_n = blank_like(pf.thr)
+    leaf_n = blank_like(pf.leaf, extra=(pf.leaf.shape[2],))
+    cover_n = None if pf.cover is None else blank_like(pf.cover)
+    gain_n = None if pf.gain is None else blank_like(pf.gain)
+    # Padding slots self-loop so they are inert under the fixed-depth walk.
+    iota = np.arange(n_new, dtype=np.int32)
+    left_n = np.broadcast_to(iota, (n_trees, n_new)).copy()
+    right_n = left_n.copy()
+
+    feat = np.asarray(pf.feat)
+    thr = np.asarray(pf.thr)
+    leaf = np.asarray(pf.leaf)
+    cover = None if pf.cover is None else np.asarray(pf.cover)
+    gain = None if pf.gain is None else np.asarray(pf.gain)
+    for t in range(n_trees):
+        keep = np.flatnonzero(reach[t])                    # ascending old ids
+        k = keep.size
+        remap = np.zeros(n, np.int64)
+        remap[keep] = np.arange(k)
+        feat_n[t, :k] = feat[t, keep]
+        thr_n[t, :k] = thr[t, keep]
+        leaf_n[t, :k] = leaf[t, keep]
+        if cover is not None:
+            cover_n[t, :k] = cover[t, keep]
+        if gain is not None:
+            gain_n[t, :k] = gain[t, keep]
+        lk, rk = left[t, keep], right[t, keep]
+        term = lk == keep
+        left_n[t, :k] = np.where(term, np.arange(k), remap[lk])
+        right_n[t, :k] = np.where(term, np.arange(k), remap[rk])
+    upd = dict(
+        feat=jnp.asarray(feat_n), thr=jnp.asarray(thr_n),
+        left=jnp.asarray(left_n), right=jnp.asarray(right_n),
+        leaf=jnp.asarray(leaf_n),
+        cover=None if cover_n is None else jnp.asarray(cover_n),
+        gain=None if gain_n is None else jnp.asarray(gain_n),
+        node_count=jnp.asarray(counts),
+        depth=max(_pointer_max_depth(left_n, right_n), 1))
+    return pf._replace(**upd)
 
 
 # ---------------------------------------------------------------------------
@@ -387,10 +559,49 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
                                 out_col, jnp.float32(lr), depth=depth)
 
 
-def predict_raw(pf: PackedForest, codes: jax.Array, *, mode="jnp",
+def forest_apply_quant(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
+                       thr: jax.Array, left: jax.Array, right: jax.Array,
+                       leaf: jax.Array, leaf_scale: jax.Array,
+                       out_col: jax.Array, lr, *, depth: int,
+                       mode="jnp") -> jax.Array:
+    """Quantized-forest traversal under the same ``use_kernel`` resolution
+    as `forest_apply`: uint8/int-code thresholds, int8/bf16 leaf blocks
+    dequantized in-flight (``astype(f32) * leaf_scale[t]``), fp32
+    accumulation.  Split decisions match the fp32 walk exactly (thresholds
+    are bin codes); the result is bit-identical to `forest_apply` on
+    `core.quantize.dequantize_forest` of the same model."""
+    from repro.kernels import ops as kops
+    mode, interp = kops.resolve_dispatch(mode)
+    if mode != "jnp":
+        return kops.forest_apply_quant(F_init, codes, feat, thr, left, right,
+                                       leaf, leaf_scale, out_col, lr,
+                                       depth=depth, interpret=interp)
+    from repro.kernels import ref
+    return ref.forest_apply_quant_ref(F_init, codes, feat, thr, left, right,
+                                      leaf, leaf_scale, out_col,
+                                      jnp.float32(lr), depth=depth)
+
+
+def _apply_forest_chunk(pf, F0: jax.Array, part: jax.Array,
+                        mode) -> jax.Array:
+    """One chunk through the right traversal for the forest's storage:
+    quantized forests (recognized by their ``leaf_scale`` field) take the
+    dequantizing path, fp32 forests the plain one."""
+    scale = getattr(pf, "leaf_scale", None)
+    if scale is None:
+        return forest_apply(F0, part, pf.feat, pf.thr, pf.left, pf.right,
+                            pf.leaf, pf.out_col, pf.lr, depth=pf.depth,
+                            mode=mode)
+    return forest_apply_quant(F0, part, pf.feat, pf.thr, pf.left, pf.right,
+                              pf.leaf, scale, pf.out_col, pf.lr,
+                              depth=pf.depth, mode=mode)
+
+
+def predict_raw(pf, codes: jax.Array, *, mode="jnp",
                 row_chunk: int = 0) -> jax.Array:
     """Raw ensemble scores ``F(x) = base + lr * sum_t f_t(x)``, streamed in
-    row chunks.
+    row chunks.  Accepts a fp32 `PackedForest` or a
+    `core.quantize.QuantizedForest` (dispatched by storage).
 
     ``row_chunk > 0`` bounds the per-dispatch working set (rows x outputs
     stay resident on-device; the forest is revisited per chunk): chunk i is
@@ -407,9 +618,44 @@ def predict_raw(pf: PackedForest, codes: jax.Array, *, mode="jnp",
         if part.shape[0] < chunk:                 # pad tail, keep one trace
             part = jnp.pad(part, ((0, chunk - part.shape[0]), (0, 0)))
         F0 = jnp.broadcast_to(pf.base, (chunk, d)).astype(jnp.float32)
-        outs.append(forest_apply(F0, part, pf.feat, pf.thr, pf.left,
-                                 pf.right, pf.leaf, pf.out_col, pf.lr,
-                                 depth=pf.depth, mode=mode))
+        outs.append(_apply_forest_chunk(pf, F0, part, mode))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out[:n]
+
+
+def predict_raw_pipelined(pf, codes, *, mode="jnp",
+                          row_chunk: int = 8192) -> jax.Array:
+    """Double-buffered `predict_raw`: overlap host->device copies with
+    traversal.
+
+    The host slices chunk ``i+1`` and enqueues its ``jax.device_put``
+    BEFORE dispatching the traversal of chunk ``i`` — JAX's async dispatch
+    then runs the copy and the compute concurrently, so a request stream
+    larger than one chunk pays max(copy, compute) per chunk instead of
+    copy + compute.  Every chunk reuses one compiled executable (the tail is
+    zero-padded) and the per-chunk arithmetic is identical to `predict_raw`,
+    so results are bit-equal — asserted by the serving-tier tests.  The
+    `forest_apply` F_init buffer is donated, so each chunk's accumulator is
+    updated in place rather than reallocated.
+    """
+    codes_h = np.asarray(codes)
+    n, d = codes_h.shape[0], pf.n_outputs
+    chunk = min(max(int(row_chunk), 1), n) if n else 1
+    starts = list(range(0, n, chunk))
+
+    def stage(s):
+        part = codes_h[s:s + chunk]
+        if part.shape[0] < chunk:
+            part = np.pad(part, ((0, chunk - part.shape[0]), (0, 0)))
+        return jax.device_put(jnp.asarray(part))   # async H2D begins now
+
+    buf = stage(starts[0]) if starts else None
+    outs = []
+    for idx, s in enumerate(starts):
+        nxt = stage(starts[idx + 1]) if idx + 1 < len(starts) else None
+        F0 = jnp.broadcast_to(pf.base, (chunk, d)).astype(jnp.float32)
+        outs.append(_apply_forest_chunk(pf, F0, buf, mode))
+        buf = nxt
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     return out[:n]
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -93,3 +93,147 @@ def quantize_uniform(X: jax.Array, n_bins: int = MAX_BINS) -> jax.Array:
     scale = (n_bins - 1) / jnp.maximum(hi - lo, 1e-12)
     codes = jnp.clip((X - lo) * scale, 0, n_bins - 2).astype(jnp.int32) + 1
     return jnp.where(jnp.isnan(X), 0, codes).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Model quantization (the serving tier's storage format).
+#
+# Feature quantization above happens once at FIT time; the functions below
+# quantize the trained MODEL for inference.  Thresholds are bin codes — by
+# construction < MAX_BINS = 256 — so uint8 threshold storage is split-EXACT:
+# the quantized walk takes the identical branch at every node and terminal
+# node ids match the fp32 forest bit-for-bit (asserted, not allclose).  Only
+# the leaf value blocks are lossy: bfloat16 (round-to-nearest-even, widened
+# exactly back to f32 at traversal time) or int8 with one symmetric fp32
+# scale per tree.  Accumulation stays fp32 in both the jnp oracle
+# (`kernels.ref.forest_apply_quant_ref`) and the Pallas kernel
+# (`kernels.predict_kernel.forest_traverse_quant_pallas`).
+# ---------------------------------------------------------------------------
+
+QUANTIZE_DTYPES = ("bfloat16", "int8")
+
+
+class QuantizedForest(NamedTuple):
+    """A `core.forest.PackedForest` with quantized threshold/leaf storage.
+
+    Same sparse-pointer topology and field meanings as `PackedForest` (one
+    unified node id space per tree, terminal self-loops, node-indexed leaf
+    blocks) with three representation changes:
+
+      * ``thr`` is uint8 — bin codes, exact (see module comment above);
+      * ``leaf`` is bfloat16 or int8;
+      * ``leaf_scale`` (T, 1) float32 is the per-tree symmetric dequant
+        scale.  Dequantized value = ``leaf.astype(f32) * leaf_scale[t]``;
+        all-ones for bfloat16 (the widening is exact on its own).
+
+    The presence of ``leaf_scale`` is how downstream dispatch
+    (`core.forest.predict_raw`, `io.checkpoint`) recognizes a quantized
+    forest without isinstance checks across module boundaries.
+    """
+    feat: jax.Array        # (T, N) int32
+    thr: jax.Array         # (T, N) uint8 bin-code thresholds (split-exact)
+    left: jax.Array        # (T, N) int32 child pointers (self-loop on leaves)
+    right: jax.Array       # (T, N) int32
+    leaf: jax.Array        # (T, N, w) int8 | bfloat16 leaf blocks
+    leaf_scale: jax.Array  # (T, 1) float32 per-tree dequant scale
+    out_col: jax.Array     # (T,) int32
+    base: jax.Array        # (d,) float32
+    lr: jax.Array          # () float32
+    cover: Optional[jax.Array] = None       # (T, N) float32
+    gain: Optional[jax.Array] = None        # (T, N) float32
+    node_count: Optional[jax.Array] = None  # (T,) int32
+    depth: int = 0         # static walk bound (manifest metadata)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.feat.shape[1]
+
+    @property
+    def leaf_width(self) -> int:
+        return self.leaf.shape[2]
+
+    @property
+    def n_outputs(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def trees_per_round(self) -> int:
+        return 1 if self.leaf_width == self.n_outputs else self.n_outputs
+
+    @property
+    def n_rounds(self) -> int:
+        return self.n_trees // self.trees_per_round
+
+    @property
+    def nbytes(self) -> int:
+        """Model bytes at rest (thresholds + pointers + leaves + scales)."""
+        return sum(np.asarray(x).nbytes for x in
+                   (self.feat, self.thr, self.left, self.right, self.leaf,
+                    self.leaf_scale, self.out_col, self.base))
+
+
+def quantize_forest(pf, dtype: str = "bfloat16") -> QuantizedForest:
+    """Quantize a `PackedForest` for serving: uint8 thresholds + ``dtype``
+    leaves.
+
+    ``bfloat16`` keeps ~3 significant decimal digits per leaf value
+    (round-to-nearest-even; widening back to f32 is exact, so the traversal
+    of a bf16 forest is bit-identical to the fp32 traversal of its
+    dequantized twin).  ``int8`` stores one symmetric per-tree scale
+    ``max|leaf| / 127``; the worst-case leaf error is ``scale / 2`` per tree
+    and the fp32 accumulator keeps the sum error linear in tree count.
+    Split decisions are exact under BOTH dtypes (thresholds are bin codes).
+    """
+    if dtype not in QUANTIZE_DTYPES:
+        raise ValueError(f"quantize dtype must be one of {QUANTIZE_DTYPES}, "
+                         f"got {dtype!r}")
+    thr = np.asarray(pf.thr)
+    if thr.size and (thr.min() < 0 or thr.max() >= MAX_BINS):
+        raise ValueError(
+            f"thresholds outside the uint8 bin-code range "
+            f"[0, {MAX_BINS}): [{thr.min()}, {thr.max()}] — this forest was "
+            "not trained on binned codes and cannot be threshold-quantized")
+    leaf = np.asarray(pf.leaf, np.float32)
+    t = leaf.shape[0]
+    if dtype == "bfloat16":
+        leaf_q = jnp.asarray(leaf).astype(jnp.bfloat16)
+        scale = jnp.ones((t, 1), jnp.float32)
+    else:
+        amax = np.abs(leaf).reshape(t, -1).max(axis=1)     # (T,)
+        scale_np = np.maximum(amax, 1e-30) / 127.0
+        q = np.clip(np.rint(leaf / scale_np[:, None, None]), -127, 127)
+        leaf_q = jnp.asarray(q.astype(np.int8))
+        scale = jnp.asarray(scale_np[:, None], jnp.float32)
+    return QuantizedForest(
+        feat=jnp.asarray(pf.feat, jnp.int32),
+        thr=jnp.asarray(thr.astype(np.uint8)),
+        left=jnp.asarray(pf.left, jnp.int32),
+        right=jnp.asarray(pf.right, jnp.int32),
+        leaf=leaf_q, leaf_scale=scale,
+        out_col=jnp.asarray(pf.out_col, jnp.int32),
+        base=jnp.asarray(pf.base, jnp.float32),
+        lr=jnp.asarray(pf.lr, jnp.float32),
+        cover=pf.cover, gain=pf.gain, node_count=pf.node_count,
+        depth=int(pf.depth))
+
+
+def dequantize_forest(qf: QuantizedForest):
+    """Widen a `QuantizedForest` back to a fp32 `PackedForest`.
+
+    The result predicts bit-identically to the quantized traversal (the
+    quant paths dequantize with the same ``astype(f32) * scale`` op), which
+    is what lets explanation (`explain.shap`) run on exactly the model being
+    served.
+    """
+    from repro.core.forest import PackedForest
+    leaf = (qf.leaf.astype(jnp.float32)
+            * qf.leaf_scale[:, :, None].astype(jnp.float32))
+    return PackedForest(
+        feat=qf.feat, thr=qf.thr.astype(jnp.int32), left=qf.left,
+        right=qf.right, leaf=leaf, out_col=qf.out_col, base=qf.base,
+        lr=qf.lr, cover=qf.cover, gain=qf.gain, node_count=qf.node_count,
+        depth=int(qf.depth))

@@ -87,23 +87,37 @@ def _parent_tables(left: np.ndarray, right: np.ndarray):
     return parent[:, :n], came_right[:, :n].astype(bool)
 
 
-def _terminal_slots(left: np.ndarray, node_count):
+def _terminal_slots(left: np.ndarray, right: np.ndarray, node_count):
     """Per-tree REAL terminal node ids, padded to the forest-wide max count.
 
     Inert padding slots (ids at/after ``node_count``) also self-loop but
     are excluded — they carry zero leaves, so including them would only
     inflate the path axis (up to 2x for early-exhausted leaf-wise trees).
-    Returns ``(slots (T, L) int64, valid (T, L) bool)``; padding entries
-    point at node 0 but are masked inert by the caller.  ``L`` is rounded
-    up to a multiple of 8 so the path axis is already sublane-aligned: the
-    Pallas wrapper then never re-pads it, keeping the kernel's contraction
-    shapes identical to the jnp oracle's — the regime in which the two are
-    bit-identical (the heap-era extractor got this for free from
-    ``L = 2^depth``).
+    Root-UNREACHABLE slots below ``node_count`` are excluded too: pruning
+    (`core.forest.prune_forest`) orphans collapsed subtrees in place, and
+    their self-looping ex-terminals would otherwise enter the path axis as
+    zero-length paths with unit leaf weight, corrupting expected values.
+    Reachability is one forward sweep over ascending ids (children carry
+    larger ids than their parent in both producers).  Returns ``(slots
+    (T, L) int64, valid (T, L) bool)``; padding entries point at node 0 but
+    are masked inert by the caller.  ``L`` is rounded up to a multiple of 8
+    so the path axis is already sublane-aligned: the Pallas wrapper then
+    never re-pads it, keeping the kernel's contraction shapes identical to
+    the jnp oracle's — the regime in which the two are bit-identical (the
+    heap-era extractor got this for free from ``L = 2^depth``).
     """
     n_trees, n = left.shape
     ids = np.arange(n)
-    terminal = left == ids[None, :]
+    reach = np.zeros((n_trees, n), bool)
+    if n:
+        reach[:, 0] = True
+        rows = np.arange(n_trees)
+        for i in range(n):
+            internal = reach[:, i] & (left[:, i] != i)
+            r = rows[internal]
+            reach[r, left[internal, i]] = True
+            reach[r, right[internal, i]] = True
+    terminal = (left == ids[None, :]) & reach
     if node_count is not None:
         terminal &= ids[None, :] < np.asarray(node_count)[:, None]
     counts = terminal.sum(axis=1)
@@ -141,7 +155,7 @@ def build_path_pack(pf, *, need_cover: bool = True) -> PathPack:
     cover = (np.ones((n_trees, n)) if pf.cover is None
              else np.asarray(pf.cover, dtype=np.float64))
     parent, came_right = _parent_tables(left, right)
-    slots, valid_slot = _terminal_slots(left, pf.node_count)
+    slots, valid_slot = _terminal_slots(left, right, pf.node_count)
     n_paths = slots.shape[1]
 
     # Walk every terminal's ancestor chain leaf-to-root; edges beyond a

@@ -278,13 +278,22 @@ class CheckpointManager:
 #       to the uninterrupted run.  Every v4 training checkpoint is also a
 #       complete serving checkpoint (the forest fields are the packed
 #       prefix).
+#   5 — PR 8 (serving tier): the forest may be COMPRESSED.  A pruned and/or
+#       compacted `PackedForest` stores exactly like v4 (compression is pure
+#       array surgery, invisible to the format); a `core.quantize
+#       .QuantizedForest` additionally carries ``leaf_scale`` and stores its
+#       uint8 thresholds / int8-or-bf16 leaf blocks verbatim, with the leaf
+#       dtype recorded in the manifest's ``quantized`` key (bf16 rides the
+#       byte-view + ``_dtypes`` machinery every checkpoint already uses).
 # Loaders are backward compatible: manifests without ``format_version`` are
 # v1; v1/v2 heap steps are upgraded in memory through
 # `core.forest.heap_packed_to_pointer` (bit-identical predictions); v3
 # steps are v4 steps without train state (serving works, resume raises an
-# informative error); fields absent from the manifest load as ``None``
-# (explainability degrades gracefully — prediction is unaffected).
-FOREST_FORMAT_VERSION = 4
+# informative error); v3/v4 steps are v5 steps that happen to be fp32 and
+# uncompressed (``quantized`` absent -> `PackedForest`); fields absent from
+# the manifest load as ``None`` (explainability degrades gracefully —
+# prediction is unaffected).
+FOREST_FORMAT_VERSION = 5
 
 
 def save_forest_checkpoint(root: str, packed, quantizer=None, *,
@@ -301,6 +310,12 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
     ``metadata`` should carry the loss name (serving uses it to pick the
     probability transform) plus anything else the operator wants pinned to
     the model.
+
+    ``packed`` may also be a `core.quantize.QuantizedForest` (format v5):
+    its extra ``leaf_scale`` tensor rides the same flat pytree and the
+    leaf storage dtype is pinned in the manifest's ``quantized`` key so the
+    loader rebuilds the right NamedTuple (bf16 leaves go through the
+    byte-view + ``_dtypes`` machinery like any other bf16 tensor).
     """
     forest_dict = {k: v for k, v in packed._asdict().items()
                    if v is not None and k != "depth"}
@@ -312,6 +327,8 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
     meta.update(kind="packed_forest", fields=list(forest_dict),
                 has_quantizer=quantizer is not None, depth=int(packed.depth),
                 format_version=FOREST_FORMAT_VERSION)
+    if "leaf_scale" in forest_dict:
+        meta["quantized"] = str(np.asarray(packed.leaf).dtype)
     mgr = CheckpointManager(root, keep_n=keep_n, async_save=False)
     mgr.save(step, tree, metadata=meta)
 
@@ -319,14 +336,18 @@ def save_forest_checkpoint(root: str, packed, quantizer=None, *,
 def load_forest_checkpoint(root: str, step: Optional[int] = None):
     """Load a serving checkpoint: ``(PackedForest, Quantizer | None, meta)``.
 
-    Backward compatible across the format history: v3 steps load verbatim
+    Backward compatible across the format history: v3+ steps load verbatim
     (``depth`` restored from the manifest); v1/v2 implicit-heap steps are
     converted to the pointer topology in memory — predictions are
     bit-identical, and a v1 step's missing cover/gain load as ``None``
-    (prediction works, explainability raises informative errors).
+    (prediction works, explainability raises informative errors).  A v5
+    step whose manifest carries ``quantized`` rebuilds a
+    `core.quantize.QuantizedForest` — its first tuple element then serves
+    through the same `ForestServer` / `predict_raw` surface (duck-typed on
+    ``leaf_scale``), bit-identical to the forest that was saved.
     """
     from repro.core.forest import PackedForest, heap_packed_to_pointer
-    from repro.core.quantize import Quantizer
+    from repro.core.quantize import Quantizer, QuantizedForest
 
     mgr = CheckpointManager(root, async_save=False)
     step = step if step is not None else mgr.latest_step()
@@ -342,7 +363,9 @@ def load_forest_checkpoint(root: str, step: Optional[int] = None):
         like["quantizer"] = {"edges": 0, "n_bins": 0}
     tree, _ = mgr.restore(like, step)
     f = tree["forest"]
-    if meta["format_version"] >= 3:
+    if meta.get("quantized"):
+        packed = QuantizedForest(**f, depth=int(meta["depth"]))
+    elif meta["format_version"] >= 3:
         packed = PackedForest(**f, depth=int(meta["depth"]))
     else:
         # v1/v2 heap layout: left/right are redundant heap pointers and the

@@ -15,7 +15,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hist_kernel import hist_tiles_pallas, histogram_pallas
-from repro.kernels.predict_kernel import forest_traverse_pallas
+from repro.kernels.predict_kernel import (forest_traverse_pallas,
+                                          forest_traverse_quant_pallas)
 from repro.kernels.ref import SHAP_BIG_BIN as _SHAP_BIG
 from repro.kernels.shap_kernel import shap_pallas
 from repro.kernels.split_kernel import split_scan_pallas
@@ -338,6 +339,50 @@ def forest_apply(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
 
 
 @functools.partial(jax.jit,
+                   static_argnames=("depth", "row_tile", "lane_pad",
+                                    "interpret"),
+                   donate_argnums=(0,))
+def forest_apply_quant(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
+                       thr: jax.Array, left: jax.Array, right: jax.Array,
+                       leaf: jax.Array, leaf_scale: jax.Array,
+                       out_col: jax.Array, lr, *, depth: int,
+                       row_tile: int = 256, lane_pad: int | None = None,
+                       interpret: bool = True) -> jax.Array:
+    """Quantized packed-forest traversal (storage-compressed serving path).
+
+    Same padding policy as `forest_apply`; the leaf tensor is padded in its
+    OWN dtype (int8 / bfloat16) so the kernel's VMEM working set keeps the
+    compression win, thresholds are widened to int32 on the way in (uint8
+    bin codes — the walk is split-exact), and dequantization happens
+    in-kernel against the per-tree SMEM scale.  Semantics contract:
+    `ref.forest_apply_quant_ref`.
+    """
+    n, m = codes.shape
+    d = F_init.shape[1]
+    w = leaf.shape[2]
+    lane_pad = _resolve_lane_pad(lane_pad, interpret)
+    codes_p = _pad_to(_pad_to(codes.astype(jnp.int32), row_tile, axis=0),
+                      lane_pad, axis=1)
+    F_p = _pad_to(_pad_to(F_init.astype(jnp.float32), row_tile, axis=0),
+                  lane_pad, axis=1)
+    feat_p = _pad_to(feat.astype(jnp.int32), lane_pad, axis=1)
+    thr_p = _pad_to(thr.astype(jnp.int32), lane_pad, axis=1)
+    left_p = _pad_to(left.astype(jnp.int32), lane_pad, axis=1)
+    right_p = _pad_to(right.astype(jnp.int32), lane_pad, axis=1)
+    leaf_p = _pad_to(_pad_to(leaf, lane_pad, axis=1), lane_pad, axis=2)
+    params = jnp.asarray([[lr]], jnp.float32)
+    scale = leaf_scale.astype(jnp.float32).reshape(-1, 1)
+    out = forest_traverse_quant_pallas(params,
+                                       out_col.astype(jnp.int32)[:, None],
+                                       scale, F_p, codes_p, feat_p, thr_p,
+                                       left_p, right_p, leaf_p,
+                                       depth=depth, leaf_width=w,
+                                       row_tile=row_tile,
+                                       interpret=interpret)
+    return out[:n, :d]
+
+
+@functools.partial(jax.jit,
                    static_argnames=("n_outputs", "depth", "row_tile",
                                     "lane_pad", "interpret"))
 def tree_shap(codes: jax.Array, slot_feat: jax.Array, slot_lo: jax.Array,
@@ -425,6 +470,7 @@ histogram_ref = ref.histogram_ref
 histogram_tiles_ref = ref.histogram_tiles_ref
 split_scan_ref = ref.split_scan_ref
 forest_apply_ref = ref.forest_apply_ref
+forest_apply_quant_ref = ref.forest_apply_quant_ref
 tree_shap_ref = ref.tree_shap_ref
 tree_shap_interventional_ref = ref.tree_shap_interventional_ref
 mha_ref = ref.mha_ref

@@ -106,6 +106,76 @@ def _forest_kernel(params_ref, col_ref, init_ref, codes_ref, feat_ref,
         preferred_element_type=jnp.float32)
 
 
+def _forest_quant_kernel(params_ref, col_ref, scale_ref, init_ref, codes_ref,
+                         feat_ref, thr_ref, left_ref, right_ref, leaf_ref,
+                         out_ref, *, depth: int, leaf_width: int):
+    """Quantized-storage variant of `_forest_kernel` (fp32 accumulation).
+
+    Identical walk — thresholds arrive as exact small integers whatever
+    their storage dtype (bin codes < 256), so the branch decisions are
+    bit-identical to the fp32 kernel — plus one in-VMEM dequantization of
+    the int8/bf16 leaf block (``astype(f32) * scale_ref[t]``) before the
+    terminal one-hot gather.  Dequantizing the block before the exact 0/1
+    gather equals gathering then dequantizing, so the kernel matches
+    `ref.forest_apply_quant_ref` bit-for-bit (asserted by the parity
+    tests).  The model's VMEM working set shrinks 4x (int8) / 2x (bf16) on
+    the leaf tensor — the traversal is memory-bound on exactly that
+    tensor.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = init_ref[...]
+
+    lr = params_ref[0, 0]
+    codes = codes_ref[...].astype(jnp.float32)             # (TN, M)
+    tn, m_pad = codes.shape
+    n_pad = feat_ref.shape[1]                              # node id space
+    feat_all = feat_ref[0, :]                              # (N,)
+    thr_all = thr_ref[0, :].astype(jnp.float32)
+    left_all = left_ref[0, :].astype(jnp.float32)          # exact small ints
+    right_all = right_ref[0, :].astype(jnp.float32)
+    feat_oh = (feat_all[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (n_pad, m_pad), 1)).astype(jnp.float32)
+    ptrs = jnp.stack([thr_all, left_all, right_all], axis=1)  # (N, 3)
+    pos = jnp.zeros((tn, 1), jnp.int32)                    # node id per row
+
+    for _ in range(depth):
+        pos_oh = (pos == jax.lax.broadcasted_iota(
+            jnp.int32, (tn, n_pad), 1)).astype(jnp.float32)  # (TN, N)
+        sel = jax.lax.dot_general(                         # (TN, M) row's split
+            pos_oh, feat_oh,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        code = jnp.sum(sel * codes, axis=1, keepdims=True)  # (TN, 1) exact
+        tlr = jax.lax.dot_general(                         # (TN, 3) thr/l/r
+            pos_oh, ptrs,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        go_right = code > tlr[:, 0:1]
+        pos = jnp.where(go_right, tlr[:, 2:3], tlr[:, 1:2]).astype(jnp.int32)
+
+    l_pad = leaf_ref.shape[1]
+    leaf_oh = (pos == jax.lax.broadcasted_iota(
+        jnp.int32, (tn, l_pad), 1)).astype(jnp.float32)
+    leaf_deq = leaf_ref[0].astype(jnp.float32) * scale_ref[0, 0]
+    pred = jax.lax.dot_general(                            # (TN, W) leaf block
+        leaf_oh, leaf_deq,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    col = col_ref[0, 0]
+    w_pad, d_pad = pred.shape[1], out_ref.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (w_pad, d_pad), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (w_pad, d_pad), 1)
+    place = ((rows < leaf_width) & (rows + col == cols)).astype(jnp.float32)
+    out_ref[...] += lr * jax.lax.dot_general(
+        pred, place,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("depth", "leaf_width", "row_tile", "interpret"))
@@ -159,3 +229,60 @@ def forest_traverse_pallas(params: jax.Array, out_col: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), jnp.float32),
         interpret=interpret,
     )(params, out_col, F_init, codes, feat, thr, left, right, leaf)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "leaf_width", "row_tile", "interpret"))
+def forest_traverse_quant_pallas(params: jax.Array, out_col: jax.Array,
+                                 leaf_scale: jax.Array, F_init: jax.Array,
+                                 codes: jax.Array, feat: jax.Array,
+                                 thr: jax.Array, left: jax.Array,
+                                 right: jax.Array, leaf: jax.Array,
+                                 *, depth: int, leaf_width: int,
+                                 row_tile: int = 256,
+                                 interpret: bool = True) -> jax.Array:
+    """Quantized raw kernel entry (padded inputs — use
+    `ops.forest_apply_quant`).
+
+    Same grid/specs as `forest_traverse_pallas` plus a per-tree SMEM
+    dequant scale:
+
+      leaf_scale: (T, 1) float32 — dequant scale of each tree's leaf block
+               (all-ones for bfloat16 leaves).
+      leaf:    (T, N, W) int8 or bfloat16 node-indexed leaf blocks,
+               dequantized in VMEM; fp32 accumulation throughout.
+      thr:     (T, N) int32 bin-code thresholds (uint8 storage is widened
+               by the wrapper — the walk compares exact small integers).
+    """
+    n_pad, m_pad = codes.shape
+    n_trees, node_pad = feat.shape
+    l_pad, w_pad = leaf.shape[1], leaf.shape[2]
+    d_pad = F_init.shape[1]
+    assert n_pad % row_tile == 0 and l_pad == node_pad
+    assert w_pad >= leaf_width and node_pad < 2 ** 24  # exact f32 pointers
+    grid = (n_pad // row_tile, n_trees)
+
+    return pl.pallas_call(
+        functools.partial(_forest_quant_kernel, depth=depth,
+                          leaf_width=leaf_width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda r, t: (t, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda r, t: (t, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((row_tile, d_pad), lambda r, t: (r, 0)),
+            pl.BlockSpec((row_tile, m_pad), lambda r, t: (r, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, node_pad), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, l_pad, w_pad), lambda r, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, d_pad), lambda r, t: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(params, out_col, leaf_scale, F_init, codes, feat, thr, left, right,
+      leaf)

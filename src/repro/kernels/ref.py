@@ -160,6 +160,47 @@ def forest_apply_ref(F_init: jax.Array, codes: jax.Array, feat: jax.Array,
     return acc
 
 
+@functools.partial(jax.jit, static_argnames=("depth",), donate_argnums=(0,))
+def forest_apply_quant_ref(F_init: jax.Array, codes: jax.Array,
+                           feat: jax.Array, thr: jax.Array, left: jax.Array,
+                           right: jax.Array, leaf: jax.Array,
+                           leaf_scale: jax.Array, out_col: jax.Array,
+                           lr: jax.Array, *, depth: int) -> jax.Array:
+    """Oracle for the QUANTIZED packed-forest traversal.
+
+    Same contract as `forest_apply_ref` with quantized storage: ``thr`` may
+    be uint8 (bin codes — widened to int32 for the walk, so split decisions
+    are bit-identical to the fp32 forest), ``leaf`` is int8 or bfloat16 with
+    a per-tree fp32 ``leaf_scale`` (T, 1); the dequantized value is
+    ``leaf.astype(f32) * scale`` and accumulation stays fp32.  Dequantizing
+    after the terminal gather is the same elementwise op as dequantizing the
+    whole block first, so this oracle is bit-identical to `forest_apply_ref`
+    on `core.quantize.dequantize_forest` of the same model — the exactness
+    contract the serving-tier tests assert.
+    """
+    n = codes.shape[0]
+    w = leaf.shape[2]
+
+    def body(acc, tree_arrays):
+        f, th, lft, rgt, v, sc, col = tree_arrays
+        pos = node_walk_ref(f, th.astype(jnp.int32), lft, rgt, codes,
+                            depth=depth)
+        deq = v[pos].astype(jnp.float32) * sc[0]           # (n, w) fp32
+        contrib = lr * deq
+        if w == acc.shape[1]:          # full-width leaf block: col is 0
+            acc = acc + contrib
+        else:                          # narrow block at a traced column
+            cur = jax.lax.dynamic_slice(acc, (0, col), (n, w))
+            acc = jax.lax.dynamic_update_slice(acc, cur + contrib, (0, col))
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, F_init.astype(jnp.float32),
+                          (feat, thr, left, right, leaf,
+                           leaf_scale.astype(jnp.float32),
+                           out_col.astype(jnp.int32)))
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # TreeSHAP over packed root-to-leaf paths (oracle for kernels/shap_kernel.py).
 # ---------------------------------------------------------------------------

@@ -115,6 +115,19 @@ def main():
     ap.add_argument("--features", type=int, default=0,
                     help="request feature count (default: from metadata)")
     ap.add_argument("--max-batch", type=int, default=4096)
+    ap.add_argument("--prune-alpha", type=float, default=None,
+                    help="cost-complexity post-pruning threshold (0.0 "
+                         "removes gainless splits; default: no pruning)")
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "bfloat16", "int8"),
+                    help="leaf-block storage dtype (thresholds stay "
+                         "split-exact uint8 bin codes)")
+    ap.add_argument("--max-buckets", type=int, default=0,
+                    help="LRU cap on padded-batch compile buckets "
+                         "(0 = unbounded)")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="overlap host->device copies with traversal on "
+                         "streamed oversize batches")
     ap.add_argument("--explain", action="store_true",
                     help="also drive the SHAP explanation endpoint and "
                     "print a top-k attribution report")
@@ -136,8 +149,10 @@ def main():
         return
 
     from repro.training.serve_lib import ForestServer
-    server = ForestServer.from_checkpoint(args.ckpt,
-                                          max_batch=args.max_batch)
+    server = ForestServer.from_checkpoint(
+        args.ckpt, max_batch=args.max_batch, prune_alpha=args.prune_alpha,
+        quantize=args.quantize, max_buckets=args.max_buckets,
+        double_buffer=args.double_buffer)
     if server.quantizer is None:
         ap.error(f"checkpoint {args.ckpt} has no quantizer; this driver "
                  "sends raw float features (re-save with the quantizer, or "
@@ -146,6 +161,14 @@ def main():
     print(f"[serve] loaded forest: {server.packed.n_trees} trees, "
           f"depth {server.packed.depth}, d={server.packed.n_outputs}, "
           f"kernel mode {server.mode!r}")
+    comp = server.compression
+    if comp["prune_alpha"] is not None or comp["quantize"] != "none":
+        print(f"[serve] compression: {comp['nodes_before']} -> "
+              f"{comp['nodes_after']} nodes, depth {comp['depth_before']} "
+              f"-> {comp['depth_after']}, {comp['bytes_before']:,} -> "
+              f"{comp['bytes_after']:,} bytes "
+              f"(prune_alpha={comp['prune_alpha']}, "
+              f"quantize={comp['quantize']})")
 
     rng = np.random.default_rng(args.seed)
     requests = [rng.normal(size=(args.rows, meta_m)).astype(np.float32)

@@ -20,6 +20,7 @@ The LM decode-serving shells that used to live here moved to
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -40,6 +41,32 @@ class ForestServeConfig:
     shapes ever exist); anything larger streams through the chunked predict
     in ``min(row_chunk, max_batch)`` slices — one more fixed shape, never a
     per-batch-size compile.
+
+    Model compression (applied once at server construction, before any
+    compile — docs/inference.md "Serving tier"):
+
+    * ``prune_alpha`` — cost-complexity post-pruning threshold
+      (`core.forest.prune_forest` + `compact_forest`): ``None`` disables,
+      ``0.0`` removes only gainless splits, larger values trade accuracy
+      for a smaller, shallower, faster forest.  The compacted forest
+      predicts bit-identically to the pruned one.
+    * ``quantize`` — leaf-block storage: ``"none"`` (fp32), ``"bfloat16"``
+      or ``"int8"`` (`core.quantize.quantize_forest`).  Thresholds become
+      uint8 bin codes — split decisions stay EXACT; only leaf values are
+      rounded.  Explanations run on the dequantized twin of exactly the
+      forest being served.
+
+    Request-path shape/compile policy:
+
+    * ``max_buckets`` — LRU cap on the pow-2 padding buckets in active use
+      (0 = unbounded).  A full cache first tries to UPGRADE a new size to
+      the smallest cached bucket that fits (no new compile, some padding
+      waste), and only then evicts the least-recently-used bucket —
+      ``bucket_upgrades``/``bucket_evictions`` count both in ``stats``.
+    * ``double_buffer`` — overlap host->device request copies with
+      traversal for streamed batches (> ``max_batch``) via
+      `core.forest.predict_raw_pipelined`; results are bit-equal to the
+      plain path.
 
     Admission control (all default OFF — zero means unlimited/disabled):
 
@@ -63,11 +90,84 @@ class ForestServeConfig:
     max_batch: int = 4096
     row_chunk: int = 65536
     use_kernel: Any = True               # same resolution as training
+    prune_alpha: Optional[float] = None
+    quantize: str = "none"               # "none" | "bfloat16" | "int8"
+    max_buckets: int = 0
+    double_buffer: bool = False
     max_queue_rows: int = 0
     deadline_ms: float = 0.0
     overload_rows: int = 0
     fallback_rounds: int = 0
     best_iteration: int = 0
+
+
+class BucketCache:
+    """LRU set of pow-2 padded batch sizes (the compile-shape working set).
+
+    The pow-2 bucket policy bounds compiled shapes at ``log2(max_batch)``
+    per model — but a long-lived server hit by an adversarial batch-size
+    mix still instantiates ALL of them, and a multi-model registry
+    multiplies that by the number of distinct forest shapes.  This cache
+    caps the buckets in active use: a miss on a full cache first tries to
+    UPGRADE to the smallest cached bucket that fits the request (reusing an
+    already-compiled shape at the cost of some padding waste) and only
+    evicts the least-recently-used bucket when no cached bucket fits.
+    Shared across every server of a `ModelRegistry`, so models with equal
+    shape signatures converge on one bucket set — and one compiled
+    executable per bucket, courtesy of jax's jit cache.
+    """
+
+    def __init__(self, max_buckets: int = 0):
+        self.max_buckets = int(max_buckets)
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.admissions = 0
+        self.upgrades = 0
+        self.evictions = 0
+
+    def bucket_for(self, n: int, max_batch: int) -> Tuple[int, str]:
+        """Padded bucket for an ``n``-row request: ``(bucket, event)`` with
+        event one of ``"hit" | "admit" | "upgrade" | "evict"``."""
+        want = max(8, 1 << (max(n, 1) - 1).bit_length())
+        if want in self._lru:
+            self._lru.move_to_end(want)
+            self.hits += 1
+            return want, "hit"
+        if self.max_buckets and len(self._lru) >= self.max_buckets:
+            bigger = [b for b in self._lru if want < b <= max_batch]
+            if bigger:
+                b = min(bigger)
+                self._lru.move_to_end(b)
+                self.upgrades += 1
+                return b, "upgrade"
+            self._lru.popitem(last=False)
+            self.evictions += 1
+            self._lru[want] = None
+            return want, "evict"
+        self._lru[want] = None
+        self.admissions += 1
+        return want, "admit"
+
+    @property
+    def active_buckets(self) -> List[int]:
+        return sorted(self._lru)
+
+    def stats(self) -> Dict[str, Any]:
+        return {"hits": self.hits, "admissions": self.admissions,
+                "upgrades": self.upgrades, "evictions": self.evictions,
+                "active_buckets": self.active_buckets,
+                "max_buckets": self.max_buckets}
+
+
+def _forest_bytes(pf) -> int:
+    """Model bytes at rest (threshold/pointer/leaf tensors + scales)."""
+    fields = [pf.feat, pf.thr, pf.left, pf.right, pf.leaf, pf.out_col,
+              pf.base]
+    scale = getattr(pf, "leaf_scale", None)
+    if scale is not None:
+        fields.append(scale)
+    return int(sum(np.asarray(x).nbytes for x in fields))
 
 
 class ForestServer:
@@ -88,7 +188,9 @@ class ForestServer:
                    "explain_rows": 0, "explain_time_s": 0.0,
                    "shed_requests": 0, "shed_rows": 0,
                    "deadline_requests": 0, "deadline_rows": 0,
-                   "fallback_batches": 0, "fallback_rows": 0, "errors": 0}
+                   "fallback_batches": 0, "fallback_rows": 0,
+                   "bucket_upgrades": 0, "bucket_evictions": 0,
+                   "pipelined_batches": 0, "errors": 0}
 
     @staticmethod
     def _concat_requests(requests: Sequence):
@@ -99,20 +201,90 @@ class ForestServer:
 
     def __init__(self, packed, quantizer=None,
                  cfg: ForestServeConfig = ForestServeConfig(), *,
-                 clock=None):
+                 clock=None, bucket_cache: Optional[BucketCache] = None):
+        from repro.core import forest as FO
         from repro.core.histogram import resolve_kernel_mode
-        self.packed = packed
         self.quantizer = quantizer
         self.cfg = cfg
         self.mode = resolve_kernel_mode(cfg.use_kernel)
+        # Compression pipeline (construction-time, before any compile):
+        # prune -> compact on the fp32 forest, then quantize the storage.
+        # A forest that arrives already quantized (a v5 checkpoint) serves
+        # as stored — the pipeline only runs on fp32 input.
+        nodes0 = int(np.asarray(packed.node_count).sum())
+        depth0, bytes0 = packed.depth, _forest_bytes(packed)
+        already_quantized = getattr(packed, "leaf_scale", None) is not None
+        if cfg.prune_alpha is not None and not already_quantized:
+            packed = FO.compact_forest(
+                FO.prune_forest(packed, cfg.prune_alpha))
+        if cfg.quantize not in (None, "none") and not already_quantized:
+            from repro.core.quantize import quantize_forest
+            self.packed = quantize_forest(packed, cfg.quantize)
+        else:
+            self.packed = packed
+        self.compression = {
+            "nodes_before": nodes0,
+            "nodes_after": int(np.asarray(self.packed.node_count).sum()),
+            "depth_before": int(depth0), "depth_after": int(self.packed.depth),
+            "bytes_before": int(bytes0),
+            "bytes_after": int(_forest_bytes(self.packed)),
+            "prune_alpha": cfg.prune_alpha,
+            "quantize": (str(np.asarray(self.packed.leaf).dtype)
+                         if getattr(self.packed, "leaf_scale", None)
+                         is not None else "none")}
+        self._explain_packed = None     # lazy fp32 twin for SHAP
         self._path_pack = None          # lazy per-model path-slot cache
         self._fallback = None           # lazy sliced overload forest
+        self.buckets = (bucket_cache if bucket_cache is not None
+                        else BucketCache(cfg.max_buckets))
         # Injectable clock (chaos.VirtualClock in tests) so deadline
         # behavior is deterministic; wall time in production.
         self._now = clock.time if hasattr(clock, "time") else time.monotonic
         self._queue: List[Tuple[Optional[float], np.ndarray]] = []
         self._queued_rows = 0
         self.stats: Dict[str, Any] = dict(self._ZERO_STATS)
+
+    @property
+    def quantized(self) -> Optional[str]:
+        """Leaf storage dtype when serving a quantized forest, else None."""
+        if getattr(self.packed, "leaf_scale", None) is None:
+            return None
+        return str(np.asarray(self.packed.leaf).dtype)
+
+    @property
+    def explain_packed(self):
+        """The fp32 forest explanations/importances run on: the dequantized
+        twin of a quantized forest (predicts bit-identically to the served
+        model), or the served forest itself when it is already fp32."""
+        if self._explain_packed is None:
+            if self.quantized is not None:
+                from repro.core.quantize import dequantize_forest
+                self._explain_packed = dequantize_forest(self.packed)
+            else:
+                self._explain_packed = self.packed
+        return self._explain_packed
+
+    @property
+    def signature(self) -> Tuple:
+        """Padded-shape signature of this server's compiled traversals.
+
+        Two servers with equal signatures dispatch identically-shaped
+        kernels, so jax's jit cache shares ONE compiled executable between
+        them — `ModelRegistry.shared_signatures` surfaces the sharing.
+        """
+        pf = self.packed
+        return (pf.n_trees, pf.n_nodes, pf.leaf_width, pf.n_outputs,
+                int(pf.depth), str(np.asarray(pf.leaf).dtype), self.mode)
+
+    def _bucket(self, n: int) -> int:
+        """Pow-2 padding bucket for an n-row request through the LRU cache;
+        upgrade/evict events land in this server's ``stats``."""
+        bucket, event = self.buckets.bucket_for(n, self.cfg.max_batch)
+        if event == "upgrade":
+            self.stats["bucket_upgrades"] += 1
+        elif event == "evict":
+            self.stats["bucket_evictions"] += 1
+        return bucket
 
     @property
     def explainable(self) -> bool:
@@ -144,8 +316,9 @@ class ForestServer:
             overrides.setdefault("best_iteration",
                                  int(meta["best_iteration"]))
         clock = overrides.pop("clock", None)
+        bucket_cache = overrides.pop("bucket_cache", None)
         return cls(packed, quantizer, ForestServeConfig(**overrides),
-                   clock=clock)
+                   clock=clock, bucket_cache=bucket_cache)
 
     # -- scoring ------------------------------------------------------------
     def _codes(self, X) -> jax.Array:
@@ -175,11 +348,18 @@ class ForestServer:
             # Chunk size is clamped to max_batch so the streaming path adds
             # at most ONE dispatch shape to the bounded pow-2 bucket set —
             # arbitrary batch sizes never compile per-size executables.
-            out = FO.predict_raw(pf, codes, mode=self.mode,
-                                 row_chunk=min(self.cfg.row_chunk,
-                                               self.cfg.max_batch))
+            chunk = min(self.cfg.row_chunk, self.cfg.max_batch)
+            if self.cfg.double_buffer:
+                # Pipelined path: chunk i+1's host->device copy overlaps
+                # chunk i's traversal; bit-equal to the plain path.
+                out = FO.predict_raw_pipelined(pf, codes, mode=self.mode,
+                                               row_chunk=chunk)
+                self.stats["pipelined_batches"] += 1
+            else:
+                out = FO.predict_raw(pf, codes, mode=self.mode,
+                                     row_chunk=chunk)
         else:
-            bucket = max(8, 1 << (max(n, 1) - 1).bit_length())
+            bucket = self._bucket(n)
             padded = jnp.pad(codes, ((0, bucket - n), (0, 0)))
             out = FO.predict_raw(pf, padded, mode=self.mode)[:n]
         out = jax.block_until_ready(out)
@@ -318,9 +498,14 @@ class ForestServer:
                 "or pass algorithm='interventional' with a background set")
         codes = self._codes(X)
         bg = None if background is None else self._codes(background)
+        # SHAP runs on the fp32 twin of exactly the served forest — for a
+        # quantized server that is its dequantized (bit-identical
+        # predictions) PackedForest, so local accuracy holds against what
+        # `predict` actually returns.
+        epf = self.explain_packed
         if self._path_pack is None:
             self._path_pack = EX.build_path_pack(
-                self.packed, need_cover=(self.packed.cover is not None))
+                epf, need_cover=(epf.cover is not None))
         n = codes.shape[0]
         t0 = time.perf_counter()
         if n > self.cfg.max_batch:
@@ -329,15 +514,15 @@ class ForestServer:
             # (rows, m, d) — m times predict's), clamped to max_batch so the
             # compile cache stays bounded.
             phi, base = EX.shap_values(
-                self.packed, codes, algorithm=algorithm, background=bg,
+                epf, codes, algorithm=algorithm, background=bg,
                 mode=self.mode,
                 row_chunk=min(self.cfg.row_chunk, self.cfg.max_batch),
                 pack=self._path_pack)
         else:
-            bucket = max(8, 1 << (max(n, 1) - 1).bit_length())
+            bucket = self._bucket(n)
             padded = jnp.pad(codes, ((0, bucket - n), (0, 0)))
             phi, base = EX.shap_values(
-                self.packed, padded, algorithm=algorithm, background=bg,
+                epf, padded, algorithm=algorithm, background=bg,
                 mode=self.mode, pack=self._path_pack)
             phi = phi[:n]
         phi = jax.block_until_ready(phi)
@@ -370,8 +555,8 @@ class ForestServer:
             return None
         m = (None if self.quantizer is None
              else self.quantizer.edges.shape[0])
-        return np.asarray(EX.feature_importances(self.packed, kind=kind,
-                                                 n_features=m))
+        return np.asarray(EX.feature_importances(self.explain_packed,
+                                                 kind=kind, n_features=m))
 
     def throughput(self) -> float:
         """Rows/sec over everything served so far."""
@@ -381,3 +566,106 @@ class ForestServer:
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a compile-cache warmup pass)."""
         self.stats = dict(self._ZERO_STATS)
+
+
+class ModelRegistry:
+    """Serve many checkpointed forests from one process.
+
+    One registry holds named `ForestServer` instances behind a SHARED
+    `BucketCache`: every model pads its micro-batches into the same LRU'd
+    pow-2 bucket set, and models whose forests have equal padded-shape
+    signatures (`ForestServer.signature`) reuse ONE compiled traversal
+    executable via jax's jit cache — registering a second checkpoint of the
+    same architecture costs zero compiles.  Per-request routing is by model
+    name; admission control stays per-server (each model keeps its own
+    queue, deadlines and fallback forest).
+
+    >>> reg = ModelRegistry(max_buckets=4)
+    >>> reg.load("otto", "/ckpts/otto")
+    >>> reg.load("otto_int8", "/ckpts/otto", quantize="int8",
+    ...          prune_alpha=0.0)
+    >>> proba = reg.predict("otto_int8", X)
+    >>> reg.shared_signatures()          # which models share executables
+    """
+
+    def __init__(self, *, max_buckets: int = 0,
+                 bucket_cache: Optional[BucketCache] = None, clock=None):
+        self.bucket_cache = (bucket_cache if bucket_cache is not None
+                             else BucketCache(max_buckets))
+        self._clock = clock
+        self._servers: Dict[str, ForestServer] = {}
+
+    # -- membership ---------------------------------------------------------
+    def register(self, name: str, server: ForestServer) -> ForestServer:
+        """Add an existing server under ``name`` (rebinding its bucket use
+        to the registry's shared cache)."""
+        server.buckets = self.bucket_cache
+        self._servers[name] = server
+        return server
+
+    def load(self, name: str, root: str, step: Optional[int] = None,
+             **overrides) -> ForestServer:
+        """`ForestServer.from_checkpoint` + register: the overrides accept
+        every `ForestServeConfig` knob (``quantize=\"int8\"``,
+        ``prune_alpha=0.0``, ...), so one checkpoint can be registered
+        several times at different compression points."""
+        server = ForestServer.from_checkpoint(
+            root, step, clock=self._clock, bucket_cache=self.bucket_cache,
+            **overrides)
+        self._servers[name] = server
+        return server
+
+    def unregister(self, name: str) -> None:
+        del self._servers[name]
+
+    def get(self, name: str) -> ForestServer:
+        try:
+            return self._servers[name]
+        except KeyError:
+            raise KeyError(
+                f"no model {name!r} in registry (have: "
+                f"{sorted(self._servers)})") from None
+
+    def names(self) -> List[str]:
+        return sorted(self._servers)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._servers
+
+    def __len__(self) -> int:
+        return len(self._servers)
+
+    # -- routing ------------------------------------------------------------
+    def predict(self, name: str, X) -> jax.Array:
+        return self.get(name).predict(X)
+
+    def predict_raw(self, name: str, X) -> jax.Array:
+        return self.get(name).predict_raw(X)
+
+    def serve(self, name: str, requests: Sequence):
+        return self.get(name).serve(requests)
+
+    def explain(self, name: str, X, **kw):
+        return self.get(name).explain(X, **kw)
+
+    # -- introspection ------------------------------------------------------
+    def signatures(self) -> Dict[str, Tuple]:
+        return {name: srv.signature for name, srv in self._servers.items()}
+
+    def shared_signatures(self) -> Dict[Tuple, List[str]]:
+        """Padded-shape signature -> model names; groups of size > 1 share
+        one compiled executable per bucket (jax jit cache)."""
+        groups: Dict[Tuple, List[str]] = {}
+        for name in sorted(self._servers):
+            groups.setdefault(self._servers[name].signature, []).append(name)
+        return groups
+
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate view: shared bucket-cache counters + per-model stats
+        and compression records."""
+        return {
+            "bucket_cache": self.bucket_cache.stats(),
+            "models": {name: {"stats": dict(srv.stats),
+                              "compression": dict(srv.compression),
+                              "signature": list(srv.signature)}
+                       for name, srv in self._servers.items()}}

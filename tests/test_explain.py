@@ -243,7 +243,7 @@ def test_checkpoint_format_version_roundtrip(tmp_path):
     save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
                            metadata={"loss": "multiclass"})
     pf, q, meta = load_forest_checkpoint(str(tmp_path))
-    assert meta["format_version"] == FOREST_FORMAT_VERSION == 4
+    assert meta["format_version"] == FOREST_FORMAT_VERSION == 5
     np.testing.assert_array_equal(np.asarray(pf.cover),
                                   np.asarray(m.packed.cover))
     np.testing.assert_array_equal(np.asarray(pf.gain),

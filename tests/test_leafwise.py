@@ -365,10 +365,13 @@ def test_path_pack_excludes_inert_padding_terminals():
     N = 63                                    # max_leaves=32 worth of slots
     ids = np.arange(N)
     left = np.tile(ids, (2, 1))
+    right = np.tile(ids, (2, 1))
     left[0, 0] = 1                            # tree 0: 1 split, 2 leaves
+    right[0, 0] = 2
     left[1, 0] = 1
+    right[1, 0] = 2
     node_count = np.array([3, 3])
-    slots, valid = _terminal_slots(left, node_count)
+    slots, valid = _terminal_slots(left, right, node_count)
     assert slots.shape[1] == 8                # not 62 (the padding slots)
     assert valid.sum(axis=1).tolist() == [2, 2]
     assert set(slots[0][valid[0]].tolist()) == {1, 2}
@@ -385,7 +388,9 @@ def test_sparse_checkpoint_roundtrip(tmp_path):
     save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
                            metadata={"loss": "multiclass"})
     pf, q, meta = load_forest_checkpoint(str(tmp_path))
-    assert meta["format_version"] == 4 and meta["depth"] == m.packed.depth
+    from repro.io.checkpoint import FOREST_FORMAT_VERSION
+    assert meta["format_version"] == FOREST_FORMAT_VERSION
+    assert meta["depth"] == m.packed.depth
     for a, b in zip(pf, m.packed):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     codes = m._bin(X)

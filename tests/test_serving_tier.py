@@ -1,0 +1,446 @@
+"""Serving tier: post-training compression (prune/compact), quantized
+traversal, checkpoint format v5, the multi-model registry, the LRU bucket
+cache, and the async double-buffered scoring path.
+
+The tier's core promises are EXACTNESS claims, so the assertions here are
+``array_equal``, not ``allclose``, wherever the design says "bit-identical":
+
+  * `compact_forest` is pure renumbering — predictions bit-identical;
+  * quantized thresholds are uint8 bin codes — split decisions EXACT
+    (terminal node ids array-equal to the fp32 walk);
+  * quantized predict == fp32 predict on the dequantized twin (dequantize
+    commutes with the gather);
+  * the Pallas quant kernel (interpret) == the jnp quant oracle;
+  * checkpoint v5 round-trips a `QuantizedForest` field-for-field;
+  * the double-buffered streaming path == the plain chunked path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import forest as FO
+from repro.core.boosting import GBDTConfig, SketchBoost
+from repro.core.quantize import (QuantizedForest, apply_quantizer,
+                                 dequantize_forest, quantize_forest)
+from repro.data.pipeline import make_tabular
+
+
+def _fit(strategy="single_tree", n=400, m=8, d=4, trees=6, depth=3, seed=7,
+         **kw):
+    X, y = make_tabular("multiclass", n, m, d, seed=seed)
+    cfg = GBDTConfig(loss="multiclass", strategy=strategy,
+                     sketch_method="random_projection", sketch_k=2,
+                     n_trees=trees, depth=depth, learning_rate=0.3, **kw)
+    return SketchBoost(cfg).fit(X, y), X, y
+
+
+@pytest.fixture(scope="module")
+def model():
+    m, X, y = _fit()
+    return m, X, y
+
+
+# ---------------------------------------------------------------------------
+# Pruning: invariants, exact pass-through recovery, total collapse.
+# ---------------------------------------------------------------------------
+
+def test_prune_invariants(model):
+    m, X, _ = model
+    pf = m.packed
+    pruned = FO.prune_forest(pf, 0.0)
+    left = np.asarray(pruned.left)
+    right = np.asarray(pruned.right)
+    feat = np.asarray(pruned.feat)
+    ids = np.arange(pf.n_nodes)
+    term = left == ids[None, :]
+    # terminal self-loops stay consistent; collapsed nodes lose their split
+    np.testing.assert_array_equal(term, right == ids[None, :])
+    assert np.all(feat[term] == 0)
+    # fixed point: no remaining weakest link (an internal node with both
+    # children terminal and gain <= alpha would have been collapsed)
+    internal = ~term
+    lt = np.take_along_axis(term, left, axis=1)
+    rt = np.take_along_axis(term, right, axis=1)
+    prunable = internal & lt & rt & (np.asarray(pruned.gain) <= 0.0)
+    assert not prunable.any()
+
+
+def test_prune_zero_alpha_keeps_predictions_close(model):
+    """alpha=0 removes only gain<=0 splits whose children the cover-weighted
+    merge reconstructs; multiclass leaves are near-exact (f64 merge)."""
+    m, X, _ = model
+    codes = apply_quantizer(m.quantizer, X)
+    p0 = np.asarray(FO.predict_raw(m.packed, codes))
+    p1 = np.asarray(FO.predict_raw(FO.prune_forest(m.packed, 0.0), codes))
+    np.testing.assert_allclose(p0, p1, atol=1e-5)
+
+
+def test_prune_huge_alpha_collapses_to_stumps(model):
+    m, _, _ = model
+    pruned = FO.prune_forest(m.packed, np.inf)
+    left = np.asarray(pruned.left)
+    ids = np.arange(m.packed.n_nodes)
+    np.testing.assert_array_equal(left, np.tile(ids, (m.packed.n_trees, 1)))
+    cf = FO.compact_forest(pruned)
+    assert cf.n_nodes == 8 and int(cf.depth) == 1
+
+
+def test_prune_requires_gain_and_cover():
+    m, _, _ = _fit(trees=2, depth=2, seed=3)
+    naked = m.packed._replace(gain=None)
+    with pytest.raises(ValueError, match="gain"):
+        FO.prune_forest(naked, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Compaction: bit-parity, shrinkage, both growth strategies.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["single_tree", "one_vs_all"])
+@pytest.mark.parametrize("grow", ["depthwise", "leafwise"])
+def test_compact_bit_parity(strategy, grow):
+    kw = {"growth": "leafwise", "max_leaves": 6} \
+        if grow == "leafwise" else {}
+    m, X, _ = _fit(strategy=strategy, trees=4, **kw)
+    codes = apply_quantizer(m.quantizer, X)
+    pruned = FO.prune_forest(m.packed, 0.5)
+    compacted = FO.compact_forest(pruned)
+    p_pruned = np.asarray(FO.predict_raw(pruned, codes))
+    p_comp = np.asarray(FO.predict_raw(compacted, codes))
+    np.testing.assert_array_equal(p_pruned, p_comp)
+    # the slot axis is the sublane-padded max LIVE count (padding may exceed
+    # a heap's 2^D - 1 slots by at most the round-up to 8)
+    live = int(np.asarray(compacted.node_count).max())
+    assert compacted.n_nodes == max(live + (-live) % 8, 8)
+    assert compacted.n_nodes % 8 == 0
+    # parent < child invariant survives renumbering
+    left = np.asarray(compacted.left)
+    right = np.asarray(compacted.right)
+    ids = np.arange(compacted.n_nodes)
+    internal = left != ids[None, :]
+    assert np.all(left[internal] > np.broadcast_to(
+        ids, left.shape)[internal])
+    assert np.all(right[internal] > np.broadcast_to(
+        ids, right.shape)[internal])
+
+
+def test_compact_drops_orphans_and_recomputes_depth(model):
+    m, _, _ = model
+    pruned = FO.prune_forest(m.packed, np.inf)       # only roots survive
+    cf = FO.compact_forest(pruned)
+    assert int(np.asarray(cf.node_count).sum()) == m.packed.n_trees
+    assert int(cf.depth) == 1
+
+
+# ---------------------------------------------------------------------------
+# Quantization: split-exactness, bit-exact vs dequantized twin, envelope.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quantized_predict_bit_exact_vs_dequantized(model, dtype):
+    m, X, _ = model
+    codes = apply_quantizer(m.quantizer, X)
+    qf = quantize_forest(m.packed, dtype)
+    deq = dequantize_forest(qf)
+    p_q = np.asarray(FO.predict_raw(qf, codes))
+    p_deq = np.asarray(FO.predict_raw(deq, codes))
+    # EXACT, not allclose: dequantize commutes with the terminal gather
+    np.testing.assert_array_equal(p_q, p_deq)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quantized_splits_exact(model, dtype):
+    """uint8 thresholds on uint8 bin codes: every row lands on the SAME
+    terminal node as the fp32 forest — only leaf values are rounded."""
+    m, X, _ = model
+    codes = np.asarray(apply_quantizer(m.quantizer, X))
+    qf = quantize_forest(m.packed, dtype)
+
+    def walk(feat, thr, left, right):
+        pos = np.zeros((m.packed.n_trees, codes.shape[0]), np.int64)
+        for _ in range(int(m.packed.depth)):
+            f = np.take_along_axis(feat, pos, axis=1)
+            t = np.take_along_axis(thr, pos, axis=1)
+            go_l = codes[:, :].T[f, np.arange(codes.shape[0])[None, :]] <= t
+            nxt = np.where(go_l, np.take_along_axis(left, pos, axis=1),
+                           np.take_along_axis(right, pos, axis=1))
+            pos = nxt
+        return pos
+
+    pos_fp = walk(np.asarray(m.packed.feat), np.asarray(m.packed.thr),
+                  np.asarray(m.packed.left), np.asarray(m.packed.right))
+    pos_q = walk(np.asarray(qf.feat), np.asarray(qf.thr).astype(np.int64),
+                 np.asarray(qf.left), np.asarray(qf.right))
+    np.testing.assert_array_equal(pos_fp, pos_q)
+
+
+def test_int8_quantization_error_envelope(model):
+    """Per-tree symmetric int8: each leaf entry is within scale/2 of fp32,
+    so total drift is bounded by lr * n_trees * max_scale / 2."""
+    m, X, _ = model
+    codes = apply_quantizer(m.quantizer, X)
+    qf = quantize_forest(m.packed, "int8")
+    p0 = np.asarray(FO.predict_raw(m.packed, codes))
+    p1 = np.asarray(FO.predict_raw(qf, codes))
+    lr = float(np.asarray(m.packed.lr))
+    bound = lr * m.packed.n_trees * float(np.asarray(qf.leaf_scale).max())
+    assert float(np.abs(p0 - p1).max()) <= bound
+    # and argmax (the served class decision) flips on almost nothing
+    agree = (p0.argmax(1) == p1.argmax(1)).mean()
+    assert agree > 0.98
+
+
+def test_quantize_rejects_out_of_range_thresholds(model):
+    m, _, _ = model
+    bad = m.packed._replace(thr=np.asarray(m.packed.thr) + 300)
+    with pytest.raises(ValueError, match="bin"):
+        quantize_forest(bad, "int8")
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: quant Pallas (interpret) == quant jnp oracle, EXACT.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["single_tree", "one_vs_all"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quant_kernel_matches_oracle(strategy, dtype):
+    m, X, _ = _fit(strategy=strategy, trees=4, seed=11)
+    codes = apply_quantizer(m.quantizer, X[:64])
+    qf = quantize_forest(m.packed, dtype)
+    p_ref = np.asarray(FO.predict_raw(qf, codes, mode="jnp"))
+    p_pal = np.asarray(FO.predict_raw(qf, codes, mode="interpret"))
+    np.testing.assert_array_equal(p_ref, p_pal)
+
+
+# ---------------------------------------------------------------------------
+# slice_rounds on compressed forests (PR 7 overload fallback composes).
+# ---------------------------------------------------------------------------
+
+def test_slice_rounds_on_quantized_and_compacted(model):
+    m, X, _ = model
+    codes = apply_quantizer(m.quantizer, X[:50])
+    cf = FO.compact_forest(FO.prune_forest(m.packed, 0.0))
+    qf = quantize_forest(cf, "int8")
+    half = qf.n_rounds // 2 or 1
+    q_half = FO.slice_rounds(qf, half)
+    assert isinstance(q_half, QuantizedForest)
+    assert q_half.n_rounds == half
+    # parity: slicing then dequantizing == dequantizing then slicing
+    a = np.asarray(FO.predict_raw(q_half, codes))
+    b = np.asarray(FO.predict_raw(
+        FO.slice_rounds(dequantize_forest(qf), half), codes))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered streaming: bit-parity with the plain chunked path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [None, "int8"])
+def test_pipelined_predict_bit_parity(model, quant):
+    m, X, _ = model
+    pf = quantize_forest(m.packed, quant) if quant else m.packed
+    codes = apply_quantizer(m.quantizer, X)        # 400 rows, ragged tail
+    plain = np.asarray(FO.predict_raw(pf, codes, row_chunk=128))
+    piped = np.asarray(FO.predict_raw_pipelined(pf, codes, row_chunk=128))
+    np.testing.assert_array_equal(plain, piped)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint format v5 + legacy loads.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_checkpoint_v5_quantized_roundtrip(tmp_path, model, dtype):
+    from repro.io.checkpoint import (load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    m, X, _ = model
+    qf = quantize_forest(FO.compact_forest(FO.prune_forest(m.packed, 0.0)),
+                         dtype)
+    save_forest_checkpoint(str(tmp_path), qf, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    qf2, quant, meta = load_forest_checkpoint(str(tmp_path))
+    assert meta["format_version"] == 5
+    assert meta["quantized"] == str(np.asarray(qf.leaf).dtype)
+    assert isinstance(qf2, QuantizedForest)
+    for name, a, b in zip(qf._fields, qf, qf2):
+        if name == "depth":
+            assert a == b
+        elif a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+            assert np.asarray(a).dtype == np.asarray(b).dtype, name
+    codes = apply_quantizer(m.quantizer, X[:40])
+    np.testing.assert_array_equal(np.asarray(FO.predict_raw(qf, codes)),
+                                  np.asarray(FO.predict_raw(qf2, codes)))
+
+
+def test_checkpoint_v4_style_load_stays_fp32(tmp_path, model):
+    """A plain PackedForest save has no ``quantized`` manifest key and loads
+    as PackedForest — the v3/v4 layout is a v5 step that happens to be
+    uncompressed."""
+    from repro.io.checkpoint import (load_forest_checkpoint,
+                                     save_forest_checkpoint)
+    m, _, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    pf, _, meta = load_forest_checkpoint(str(tmp_path))
+    assert "quantized" not in meta
+    assert isinstance(pf, FO.PackedForest)
+    assert np.asarray(pf.leaf).dtype == np.float32
+
+
+def test_checkpoint_v5_to_server_serves_as_stored(tmp_path, model):
+    """Serving a v5 quantized checkpoint must NOT re-compress: the server
+    recognizes the stored QuantizedForest and serves it bit-identically."""
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = model
+    qf = quantize_forest(m.packed, "int8")
+    save_forest_checkpoint(str(tmp_path), qf, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(
+        str(tmp_path), prune_alpha=0.0, quantize="bfloat16")  # must be no-ops
+    assert server.quantized == "int8"
+    codes = apply_quantizer(m.quantizer, X[:40])
+    np.testing.assert_array_equal(
+        np.asarray(server.predict_raw(X[:40])),
+        np.asarray(FO.predict_raw(qf, codes)))
+
+
+# ---------------------------------------------------------------------------
+# BucketCache: LRU eviction, upgrade-over-evict, counters.
+# ---------------------------------------------------------------------------
+
+def test_bucket_cache_hit_admit_upgrade_evict():
+    from repro.training.serve_lib import BucketCache
+    bc = BucketCache(max_buckets=2)
+    assert bc.bucket_for(5, 256) == (8, "admit")
+    assert bc.bucket_for(7, 256) == (8, "hit")
+    assert bc.bucket_for(60, 256) == (64, "admit")
+    # full cache, 64 fits -> upgrade (padding waste over a new compile)
+    assert bc.bucket_for(20, 256) == (64, "upgrade")
+    # full cache, nothing fits within max_batch -> evict LRU (8)
+    assert bc.bucket_for(200, 256) == (256, "evict")
+    assert bc.active_buckets == [64, 256]
+    st = bc.stats()
+    assert (st["hits"], st["admissions"], st["upgrades"],
+            st["evictions"]) == (1, 2, 1, 1)
+
+
+def test_bucket_cache_unbounded_never_evicts():
+    from repro.training.serve_lib import BucketCache
+    bc = BucketCache(max_buckets=0)
+    for n in (1, 10, 100, 1000):
+        bc.bucket_for(n, 4096)
+    assert bc.stats()["evictions"] == 0
+    assert bc.active_buckets == [8, 16, 128, 1024]
+
+
+def test_server_bucket_stats(model, tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path), max_buckets=2,
+                                          max_batch=256)
+    for n in (8, 16, 32, 64):      # ascending: upgrades can't absorb
+        server.predict(X[:n])
+    assert server.stats["bucket_evictions"] >= 1
+    assert server.buckets.stats()["evictions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# ModelRegistry: shared cache, signature grouping, routing, stats.
+# ---------------------------------------------------------------------------
+
+def test_registry_end_to_end(model, tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ModelRegistry
+    m, X, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    reg = ModelRegistry(max_buckets=4)
+    reg.load("full", str(tmp_path))
+    reg.load("twin", str(tmp_path))
+    reg.load("int8", str(tmp_path), quantize="int8", prune_alpha=0.0)
+    assert reg.names() == ["full", "int8", "twin"]
+    assert "full" in reg and len(reg) == 3
+
+    # identical checkpoints share a signature -> one compiled executable
+    groups = reg.shared_signatures()
+    assert sorted(len(v) for v in groups.values()) == [1, 2]
+    assert reg.get("full").signature == reg.get("twin").signature
+
+    p_full = np.asarray(reg.predict("full", X[:30]))
+    p_twin = np.asarray(reg.predict("twin", X[:30]))
+    np.testing.assert_array_equal(p_full, p_twin)
+    p_q = np.asarray(reg.predict("int8", X[:30]))
+    assert p_q.shape == p_full.shape
+
+    # every server drew buckets from the ONE shared cache
+    st = reg.stats()
+    assert st["bucket_cache"]["admissions"] >= 1
+    assert st["bucket_cache"]["hits"] >= 1       # twin reused full's bucket
+    assert set(st["models"]) == {"full", "twin", "int8"}
+    assert st["models"]["int8"]["compression"]["quantize"] == "int8"
+
+    reg.unregister("twin")
+    assert len(reg) == 2
+    with pytest.raises(KeyError, match="twin"):
+        reg.get("twin")
+
+
+# ---------------------------------------------------------------------------
+# Compressed serving composes with PR 7 (fallback) and explanation.
+# ---------------------------------------------------------------------------
+
+def test_overload_fallback_on_compressed_server(model, tmp_path):
+    """best_iteration//2 prefix slicing must work on the pruned+quantized
+    forest actually being served."""
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(
+        str(tmp_path), prune_alpha=0.0, quantize="int8",
+        overload_rows=32, max_batch=256)
+    outs = server.serve([X[:64]])                  # past overload_rows
+    assert outs[0].shape == (64, 4)
+    assert server.stats["fallback_batches"] >= 1
+    assert server.stats["fallback_rows"] >= 64
+
+
+def test_shap_on_compressed_server(model, tmp_path):
+    """Explanations on a pruned+quantized server run on the dequantized
+    twin of the SERVED forest: local accuracy vs served predictions."""
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, X, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path), prune_alpha=0.0,
+                                          quantize="int8")
+    phi, base = server.explain(X[:24])
+    raw = np.asarray(server.predict_raw(X[:24]))
+    np.testing.assert_allclose(
+        np.asarray(base) + np.asarray(phi).sum(axis=1), raw, atol=1e-4)
+    imp = server.feature_importances("gain")
+    assert imp.shape == (X.shape[1],) and np.all(imp >= 0)
+
+
+def test_server_compression_record(model, tmp_path):
+    from repro.io.checkpoint import save_forest_checkpoint
+    from repro.training.serve_lib import ForestServer
+    m, _, _ = model
+    save_forest_checkpoint(str(tmp_path), m.packed, m.quantizer,
+                           metadata={"loss": "multiclass"})
+    server = ForestServer.from_checkpoint(str(tmp_path), prune_alpha=np.inf,
+                                          quantize="int8")
+    comp = server.compression
+    assert comp["nodes_after"] < comp["nodes_before"]
+    assert comp["bytes_after"] < comp["bytes_before"]
+    assert comp["depth_after"] == 1 and comp["quantize"] == "int8"
